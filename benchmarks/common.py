@@ -1,0 +1,48 @@
+"""Shared benchmark helpers: a small-but-real model and timed step fns."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import AttnCfg, ModelConfig
+from repro.core.packing import pack_linear_paths, pack_trees
+from repro.core.tree import serialize_tree
+from repro.models.model import init_params, loss_and_metrics, prepare_batch
+
+
+def bench_model(n_layers=4, d_model=128, vocab=1024) -> ModelConfig:
+    return ModelConfig(
+        name="bench", family="dense", n_layers=n_layers, d_model=d_model,
+        d_ff=4 * d_model, vocab_size=vocab,
+        attn=AttnCfg(n_heads=4, n_kv_heads=2, head_dim=d_model // 4,
+                     qk_norm=True),
+        dtype="float32", vocab_pad_multiple=64)
+
+
+def tree_inputs(cfg, trees, seq_len, rows=None):
+    tb = pack_trees([serialize_tree(t) for t in trees], seq_len,
+                    batch_size=rows)
+    return prepare_batch(cfg, tb), tb
+
+
+def baseline_inputs(cfg, trees, seq_len, rows=None):
+    tb = pack_linear_paths([t.linearize_paths() for t in trees], seq_len,
+                           batch_size=rows)
+    return prepare_batch(cfg, tb), tb
+
+
+def timed_loss_grad(cfg, params, inputs, iters=3, impl="ref"):
+    """Median wall time (s) of jit'd loss+grad on the packed inputs."""
+    fn = jax.jit(lambda p, b: jax.value_and_grad(
+        lambda q: loss_and_metrics(cfg, q, b, impl)[0])(p))
+    out = fn(params, inputs)            # compile + warm
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(params, inputs)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), out[0]

@@ -1,0 +1,60 @@
+"""Redundancy-Free Tree Partitioning demo (paper §3.3 + Fig. 5).
+
+A trajectory tree too large for the per-step token budget is split into
+connected subtrees with differentiable boundaries; every token is computed
+exactly once, and the gradients match the whole-tree pass to float32
+precision.
+
+Run:  PYTHONPATH=src python examples/partition_demo.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.gateway import partitioned_value_and_grad
+from repro.core.packing import pack_trees
+from repro.core.partition import (partition_token_counts, partition_tree,
+                                  standard_partition_token_counts)
+from repro.core.tree import serialize_tree
+from repro.data.synthetic import agentic_tree
+from repro.models.model import init_params, loss_and_metrics, prepare_batch
+
+rng = np.random.default_rng(0)
+tree = agentic_tree(rng, num_turns=4, turn_len_range=(12, 40),
+                    vocab_size=500)
+uniq = tree.num_unique_tokens()
+C = max(128, ((uniq // 3) // 32) * 32)      # budget ≈ a third of the tree
+print(f"tree: {uniq} unique tokens, {tree.num_leaves()} paths, "
+      f"POR={tree.por():.1%}; per-step budget C={C}")
+
+# --- Fig. 5 accounting ---------------------------------------------------
+flat = tree.flat_tokens()
+std = standard_partition_token_counts(tree, C)
+parts = partition_tree(tree, C)
+ours = partition_token_counts(parts)
+print(f"tokens computed:  baseline flatten = {flat}")
+print(f"                  standard partitioning (re-include ancestors) = "
+      f"{std}")
+print(f"                  redundancy-free (ours) = "
+      f"{ours['unique_tokens']}  == unique ✓")
+print(f"partitions: {ours['num_partitions']}  "
+      f"(each ≤ {C} tokens; boundaries differentiable)")
+
+# --- gradient equivalence vs the whole-tree pass --------------------------
+cfg = get_config("qwen3-8b", smoke=True)
+params = init_params(cfg, jax.random.key(0))
+
+ser = serialize_tree(tree)
+S = ((ser.n + 63) // 64) * 64
+whole = prepare_batch(cfg, pack_trees([ser], S))
+l_ref, _ = loss_and_metrics(cfg, params, whole)
+g_ref = jax.grad(lambda p: loss_and_metrics(cfg, p, whole)[0])(params)
+
+l_p, g_p, info = partitioned_value_and_grad(cfg, params, tree, C)
+rels = jax.tree.map(
+    lambda a, b: float(jnp.abs(a - b).max() / (jnp.abs(b).max() + 1e-9)),
+    g_p, g_ref)
+print(f"\nloss: whole-tree={float(l_ref):.6f}  partitioned={l_p:.6f}")
+print(f"max grad rel deviation: {max(jax.tree.leaves(rels)):.2e} "
+      "(paper App. B.8 bound: < 1e-4 in float32)")

@@ -1,0 +1,58 @@
+"""Quickstart: Tree Training in ~60 lines.
+
+Builds a branching agentic trajectory tree, shows the paper's core
+identity (the DFS tree loss equals the per-branch sep-avg loss exactly —
+Eq. 1–5), and takes one optimizer step on the tree batch.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.packing import pack_linear_paths, pack_trees
+from repro.core.tree import TrajectoryTree, TreeNode, serialize_tree
+from repro.models.model import init_params, loss_and_metrics, prepare_batch
+from repro.train.optimizer import OptimizerConfig, init_opt_state
+from repro.train.train_step import make_train_step
+
+# --- 1. a trajectory tree: one task that branched into 3 paths ----------
+#   (think: two concurrent tool calls, then a think-mode fork)
+rng = np.random.default_rng(0)
+tok = lambda n: rng.integers(0, 500, n).astype(np.int32)
+root = TreeNode(tokens=tok(12))                       # user prompt + plan
+tool_a = TreeNode(tokens=tok(8))                      # tool call A branch
+tool_b = TreeNode(tokens=tok(10))                     # tool call B branch
+think1 = TreeNode(tokens=tok(6))                      # think-mode variant
+tool_a.children = [think1]
+root.children = [tool_a, tool_b]
+tree = TrajectoryTree(root)
+print(f"tree: {tree.num_unique_tokens()} unique tokens, "
+      f"{tree.num_leaves()} paths, POR={tree.por():.1%} "
+      f"(theoretical speedup bound {1 / (1 - tree.por()):.2f}x)")
+
+# --- 2. the identity: tree loss == per-branch average, exactly ----------
+cfg = get_config("qwen3-8b", smoke=True)
+params = init_params(cfg, jax.random.key(0))
+
+ser = serialize_tree(tree)                            # DFS: each token once
+tree_batch = prepare_batch(cfg, pack_trees([ser], 64))
+base_batch = prepare_batch(cfg, pack_linear_paths(
+    [tree.linearize_paths()], 64))                    # prefixes repeated
+
+l_tree, _ = loss_and_metrics(cfg, params, tree_batch)
+l_base, _ = loss_and_metrics(cfg, params, base_batch)
+print(f"tree loss     = {float(l_tree):.6f}  "
+      f"({tree_batch['tokens'].size} slots)")
+print(f"baseline loss = {float(l_base):.6f}  "
+      f"({base_batch['tokens'].size} slots)")
+assert abs(float(l_tree) - float(l_base)) < 1e-4 * abs(float(l_base))
+
+# --- 3. one training step on the tree batch -----------------------------
+opt_cfg = OptimizerConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+step = make_train_step(cfg, opt_cfg, donate=False)
+params, opt_state, metrics = step(params, init_opt_state(params),
+                                  tree_batch)
+print(f"step 0: loss={float(metrics['total']):.4f} "
+      f"grad_norm={float(metrics['grad_norm']):.3f} — "
+      "every shared-prefix token computed exactly once.")

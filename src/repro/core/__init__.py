@@ -1,0 +1,3 @@
+# Tree Training core: DFS serialization (tree.py), packing (packing.py),
+# Redundancy-Free Tree Partitioning (partition.py) and the differentiable
+# partition-boundary runtime (gateway.py).

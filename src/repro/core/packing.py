@@ -1,0 +1,229 @@
+"""Packing serialized trees into fixed-shape training rows.
+
+Generalizes sequence packing (Krell et al. 2021) to prefix trees (paper §2):
+a row holds one or more whole DFS-serialized trees back to back.  Because
+``kv_last`` already bounds visibility to the token's own subtree, packed
+trees are mutually invisible with **no extra mask machinery** — the same
+two-comparison predicate covers causality, branch separation and packing.
+
+Produces ``TreeBatch`` — plain numpy arrays with static shapes, ready to be
+fed to the jitted model (and sharded over the data axes).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .tree import SerializedTree
+
+
+@dataclass
+class TreeBatch:
+    """Fixed-shape batch of packed DFS rows (+ per-token metadata)."""
+
+    tokens: np.ndarray        # i32 [B, S]
+    pos_ids: np.ndarray       # i32 [B, S]
+    kv_last: np.ndarray       # i32 [B, S]   (−1 = invisible key)
+    weight: np.ndarray        # f32 [B, S]   λ_t
+    prev_idx: np.ndarray      # i32 [B, S]   (−1 = no loss for this token)
+    valid: np.ndarray         # bool [B, S]
+    chunk_parent: Optional[np.ndarray] = None  # i32 [B, C] (−1 = init state)
+    num_trees: int = 1        # loss normalizer (mean over trees)
+    extra_embeds: Optional[np.ndarray] = None  # f32 [B, T_src, D] frontend stub
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return self.tokens.shape  # type: ignore[return-value]
+
+    def row_slice(self, b: int) -> "TreeBatch":
+        sl = lambda a: None if a is None else a[b:b + 1]
+        return TreeBatch(self.tokens[b:b + 1], self.pos_ids[b:b + 1],
+                         self.kv_last[b:b + 1], self.weight[b:b + 1],
+                         self.prev_idx[b:b + 1], self.valid[b:b + 1],
+                         sl(self.chunk_parent), 1, sl(self.extra_embeds))
+
+
+def _empty_row(S: int) -> dict[str, np.ndarray]:
+    return dict(
+        tokens=np.zeros(S, np.int32),
+        pos_ids=np.zeros(S, np.int32),
+        kv_last=np.full(S, -1, np.int32),
+        weight=np.zeros(S, np.float32),
+        prev_idx=np.full(S, -1, np.int32),
+        valid=np.zeros(S, bool),
+    )
+
+
+def pack_trees(
+    trees: Sequence[SerializedTree],
+    seq_len: int,
+    *,
+    batch_size: Optional[int] = None,
+    chunk_size: Optional[int] = None,
+) -> TreeBatch:
+    """First-fit-decreasing pack of whole serialized trees into rows.
+
+    Every tree must fit in one row (use Redundancy-Free Tree Partitioning
+    for larger trees — core/partition.py).  If ``chunk_size`` is given the
+    serializations must be chunk-aligned and rows carry a chunk_parent map.
+    """
+    order = sorted(range(len(trees)), key=lambda i: -trees[i].n)
+    rows: list[list[int]] = []
+    row_used: list[int] = []
+    for i in order:
+        n = trees[i].n
+        if n > seq_len:
+            raise ValueError(
+                f"tree of {n} tokens does not fit row of {seq_len}; "
+                "partition it first (core/partition.py)")
+        for r, used in enumerate(row_used):
+            if used + n <= seq_len:
+                rows[r].append(i)
+                row_used[r] += n
+                break
+        else:
+            rows.append([i])
+            row_used.append(n)
+
+    if batch_size is not None:
+        if len(rows) > batch_size:
+            raise ValueError(f"{len(rows)} rows > batch_size {batch_size}")
+        while len(rows) < batch_size:
+            rows.append([])
+
+    B, S = len(rows), seq_len
+    cols = {k: [] for k in
+            ("tokens", "pos_ids", "kv_last", "weight", "prev_idx", "valid")}
+    chunk_rows: list[np.ndarray] = []
+    C = None if chunk_size is None else S // chunk_size
+
+    for r in rows:
+        row = _empty_row(S)
+        cp = None if C is None else np.full(C, -1, np.int32)
+        off = 0
+        for i in r:
+            t = trees[i]
+            sl = slice(off, off + t.n)
+            row["tokens"][sl] = t.tokens
+            row["pos_ids"][sl] = t.pos_ids
+            row["kv_last"][sl] = np.where(t.kv_last < 0, -1, t.kv_last + off)
+            row["weight"][sl] = t.weight
+            row["prev_idx"][sl] = np.where(t.prev_idx < 0, -1,
+                                           t.prev_idx + off)
+            row["valid"][sl] = t.valid
+            if C is not None:
+                assert off % chunk_size == 0 and t.n % chunk_size == 0, \
+                    "SSM packing requires chunk-aligned trees"
+                tc = t.chunk_parent_map(chunk_size)
+                coff = off // chunk_size
+                cp[coff:coff + len(tc)] = np.where(tc < 0, -1, tc + coff)
+            off += t.n
+        for k in cols:
+            cols[k].append(row[k])
+        if cp is not None:
+            chunk_rows.append(cp)
+
+    return TreeBatch(
+        tokens=np.stack(cols["tokens"]),
+        pos_ids=np.stack(cols["pos_ids"]),
+        kv_last=np.stack(cols["kv_last"]),
+        weight=np.stack(cols["weight"]),
+        prev_idx=np.stack(cols["prev_idx"]),
+        valid=np.stack(cols["valid"]),
+        chunk_parent=np.stack(chunk_rows) if chunk_rows else None,
+        num_trees=len(trees),
+    )
+
+
+def pack_linear_paths(
+    trees_paths: Sequence[Sequence[dict[str, np.ndarray]]],
+    seq_len: int,
+    *,
+    batch_size: Optional[int] = None,
+    chunk_size: Optional[int] = None,
+) -> TreeBatch:
+    """Baseline: pack *linearized per-branch sequences* (Eq. 7 serialization
+    + standard sequence packing).  ``trees_paths[k]`` is the list of path
+    dicts of tree k (from ``TrajectoryTree.linearize_paths``).  Loss weights
+    are 1/K_k per trained token so the packed loss equals mean-over-trees of
+    sep-avg — directly comparable with the tree-packed loss.
+    """
+    flat: list[dict[str, np.ndarray]] = []
+    for paths in trees_paths:
+        K = len(paths)
+        for p in paths:
+            q = dict(p)
+            q["_w"] = np.where(p["trained"], p["advantage"] / K,
+                               0.0).astype(np.float32)
+            flat.append(q)
+
+    def aligned_len(n: int) -> int:
+        if chunk_size is None:
+            return n
+        return ((n + chunk_size - 1) // chunk_size) * chunk_size
+
+    order = sorted(range(len(flat)), key=lambda i: -len(flat[i]["tokens"]))
+    rows: list[list[int]] = []
+    row_used: list[int] = []
+    for i in order:
+        n = aligned_len(len(flat[i]["tokens"]))
+        if n > seq_len:
+            raise ValueError("path longer than row")
+        for r, used in enumerate(row_used):
+            if used + n <= seq_len:
+                rows[r].append(i)
+                row_used[r] += n
+                break
+        else:
+            rows.append([i])
+            row_used.append(n)
+    if batch_size is not None:
+        if len(rows) > batch_size:
+            raise ValueError(f"{len(rows)} rows > batch_size {batch_size}")
+        while len(rows) < batch_size:
+            rows.append([])
+
+    S = seq_len
+    C = None if chunk_size is None else S // chunk_size
+    out = {k: [] for k in
+           ("tokens", "pos_ids", "kv_last", "weight", "prev_idx", "valid")}
+    chunk_rows = []
+    for r in rows:
+        row = _empty_row(S)
+        cp = None if C is None else np.full(C, -1, np.int32)
+        off = 0
+        for i in r:
+            p = flat[i]
+            n = len(p["tokens"])
+            na = aligned_len(n)
+            sl = slice(off, off + n)
+            row["tokens"][sl] = p["tokens"]
+            row["pos_ids"][sl] = p["pos_ids"]
+            row["kv_last"][sl] = off + n - 1
+            row["weight"][sl] = p["_w"]
+            pv = np.arange(off - 1, off + n - 1, dtype=np.int32)
+            pv[0] = -1
+            row["prev_idx"][sl] = pv
+            row["valid"][sl] = True
+            if C is not None:
+                c0, c1 = off // chunk_size, (off + na) // chunk_size
+                for c in range(c0, c1):
+                    cp[c] = -1 if c == c0 else c - 1
+            off += na
+        for k in out:
+            out[k].append(row[k])
+        if cp is not None:
+            chunk_rows.append(cp)
+
+    return TreeBatch(
+        tokens=np.stack(out["tokens"]),
+        pos_ids=np.stack(out["pos_ids"]),
+        kv_last=np.stack(out["kv_last"]),
+        weight=np.stack(out["weight"]),
+        prev_idx=np.stack(out["prev_idx"]),
+        valid=np.stack(out["valid"]),
+        chunk_parent=np.stack(chunk_rows) if chunk_rows else None,
+        num_trees=len(trees_paths),
+    )

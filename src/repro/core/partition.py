@@ -1,0 +1,250 @@
+"""Redundancy-Free Tree Partitioning (paper §3.3) — host-side planning.
+
+When a tree exceeds the per-step token budget C, split it into connected
+subtrees with cuts at node boundaries (so the partition dependency graph
+is itself a tree → peak memory bounded by one root-to-leaf partition
+path), sized to maximize per-partition token utilization.
+
+The paper solves the bin-packing with OR-Tools; offline here we use a
+deterministic greedy: bottom-up accumulation, closing the largest child
+subtrees first when a node's accumulated open subtree exceeds C.  The
+objective (minimize #partitions s.t. ≤C tokens each) is identical; the
+optimality gap is measured in benchmarks/bench_partition.py.
+
+Each partition gets:
+  - its own DFS serialization (full-tree λ weights, depth-position offset,
+    gateway prev slots −2.. for conv/token-shift context);
+  - per-cut capture plans: which of its token positions lie on the path
+    root→cut (their KV is relayed to the child partition), which chunk
+    index holds the cut state (SSM), and the child's boundary first-token
+    labels (their loss belongs to the parent — its hidden states predict
+    them).
+"""
+from __future__ import annotations
+
+import copy
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from .tree import (SerializedTree, TrajectoryTree, TreeNode, _leaf_counts,
+                   serialize_tree)
+
+
+def split_long_nodes(tree: TrajectoryTree, max_len: int) -> TrajectoryTree:
+    """Pre-split node segments longer than max_len into chains (semantics
+    unchanged — a chain of nodes spells the same paths)."""
+
+    def rec(n: TreeNode) -> TreeNode:
+        children = [rec(c) for c in n.children]
+        if n.size <= max_len:
+            m = TreeNode(tokens=n.tokens, trained=n.trained,
+                         advantage=n.advantage)
+            m.children = children
+            return m
+        head: Optional[TreeNode] = None
+        cur: Optional[TreeNode] = None
+        for s in range(0, n.size, max_len):
+            e = min(s + max_len, n.size)
+            piece = TreeNode(tokens=n.tokens[s:e], trained=n.trained[s:e],
+                             advantage=None if n.advantage is None
+                             else n.advantage[s:e])
+            if head is None:
+                head = piece
+            else:
+                cur.children = [piece]
+            cur = piece
+        cur.children = children
+        return head
+
+    return TrajectoryTree(root=rec(tree.root))
+
+
+@dataclass
+class CutPlan:
+    """One cut node inside a partition → one child partition."""
+    child_pid: int
+    # indices (into this partition's DFS serialization) of *valid* tokens on
+    # the path partition-root → cut node, in path order:
+    path_token_idx: np.ndarray
+    # chunk index (this partition's chunk grid) holding the SSM state at the
+    # cut (= last chunk of the cut node); −1 when no SSM:
+    cut_chunk: int
+    # boundary loss: the child-partition root's first token is predicted by
+    # this partition's hidden state at the cut node's last valid token:
+    boundary_pos: int          # DFS index (here) of the predicting token
+    boundary_label: int        # child's first token id
+    boundary_weight: float     # λ of the child's first token
+
+
+@dataclass
+class TreePartition:
+    pid: int
+    parent_pid: int            # −1 for the root partition
+    ser: SerializedTree
+    anc_len: int               # #ancestor tokens (= depth-pos offset)
+    cuts: list[CutPlan] = field(default_factory=list)
+    num_paths_total: int = 1   # K of the full tree (loss normalizer)
+
+
+def _chunk_pad(n: int, chunk: Optional[int]) -> int:
+    if not chunk:
+        return n
+    return ((n + chunk - 1) // chunk) * chunk
+
+
+def partition_tree(
+    tree: TrajectoryTree,
+    capacity: int,
+    *,
+    chunk_size: Optional[int] = None,
+    loss_mode: str = "sep_avg",
+) -> list[TreePartition]:
+    """Plan partitions for one tree.  Returns them in DFS (topological)
+    order: parents precede children."""
+    unit = chunk_size or 1
+    assert capacity % unit == 0 or chunk_size is None
+    tree = split_long_nodes(tree, max(1, capacity - (unit - 1))
+                            if chunk_size else capacity)
+
+    # full-tree weights
+    g = _leaf_counts(tree.root)
+    K = g[id(tree.root)]
+    if loss_mode == "uniform":
+        lam_map = {nid: 1.0 for nid in g}
+    else:
+        lam_map = {nid: gn / K for nid, gn in g.items()}
+
+    padded = {id(n): _chunk_pad(n.size, chunk_size)
+              for n in tree.nodes()}
+
+    # --- greedy bottom-up packing: decide the set of cut nodes ------------
+    cut: set[int] = set()          # id(node) → starts a new partition
+    open_size: dict[int, int] = {}
+
+    def pack(n: TreeNode) -> int:
+        for c in n.children:
+            pack(c)
+        total = padded[id(n)] + sum(open_size[id(c)] for c in n.children)
+        if total > capacity:
+            kids = sorted(n.children, key=lambda c: -open_size[id(c)])
+            for c in kids:
+                cut.add(id(c))
+                total -= open_size[id(c)]
+                if total <= capacity:
+                    break
+        assert total <= capacity, \
+            f"node of {padded[id(n)]} tokens exceeds capacity {capacity}"
+        open_size[id(n)] = total
+        return total
+
+    pack(tree.root)
+
+    # --- materialize partitions in DFS order ------------------------------
+    parts: list[TreePartition] = []
+
+    def depth_tokens(path_nodes: list[TreeNode]) -> int:
+        return sum(n.size for n in path_nodes)
+
+    def build(root: TreeNode, parent_pid: int, anc_len: int) -> None:
+        pid = len(parts)
+        # pruned copy: descend until cut nodes; record cut children
+        cut_children: list[tuple[TreeNode, TreeNode]] = []  # (pruned_anc, orig_child)
+        lam_local: dict[int, float] = {}
+
+        def prune(n: TreeNode) -> TreeNode:
+            m = TreeNode(tokens=n.tokens, trained=n.trained,
+                         advantage=n.advantage)
+            lam_local[id(m)] = lam_map[id(n)]
+            for c in n.children:
+                if id(c) in cut:
+                    cut_children.append((m, c))
+                else:
+                    m.children.append(prune(c))
+            return m
+
+        proot = prune(root)
+        psub = TrajectoryTree(root=proot)
+        ser = serialize_tree(psub, chunk_size=chunk_size, lam_map=lam_local,
+                             depth_pos0=anc_len,
+                             root_prev=-2 if parent_pid >= 0 or anc_len > 0
+                             else -1)
+        part = TreePartition(pid=pid, parent_pid=parent_pid, ser=ser,
+                             anc_len=anc_len, num_paths_total=K)
+        parts.append(part)
+
+        # map pruned nodes → serialization node ids (DFS order coincides)
+        order: list[TreeNode] = []
+
+        def dfs(m: TreeNode):
+            order.append(m)
+            for c in m.children:
+                dfs(c)
+
+        dfs(proot)
+        nid_of = {id(m): i for i, m in enumerate(order)}
+        parent_of = {id(m): None for m in order}
+        for m in order:
+            for c in m.children:
+                parent_of[id(c)] = m
+
+        for anc_node, child in cut_children:
+            # path partition-root → anc_node (inclusive): valid token idx
+            chain = []
+            cur = anc_node
+            while cur is not None:
+                chain.append(cur)
+                cur = parent_of[id(cur)]
+            chain.reverse()
+            idxs = []
+            for m in chain:
+                nid = nid_of[id(m)]
+                s, e = int(ser.node_start[nid]), int(ser.node_end[nid])
+                idxs.extend(i for i in range(s, e) if ser.valid[i])
+            nid = nid_of[id(anc_node)]
+            e = int(ser.node_end[nid])
+            cut_chunk = -1 if not chunk_size else (e - 1) // chunk_size
+            # boundary loss: child's first token predicted from anc's last
+            last_valid = idxs[-1]
+            child_pid_placeholder = -1  # fixed after recursion ordering
+            part.cuts.append(CutPlan(
+                child_pid=child_pid_placeholder,
+                path_token_idx=np.asarray(idxs, np.int32),
+                cut_chunk=cut_chunk,
+                boundary_pos=int(last_valid),
+                boundary_label=int(child.tokens[0]),
+                boundary_weight=float(lam_map[id(child)]
+                                      * (1.0 if child.trained[0] else 0.0)
+                                      * (child.advantage[0]
+                                         if child.advantage is not None
+                                         else 1.0)),
+            ))
+
+        # recurse into children partitions (DFS): anc_len grows by the path
+        for cp, (anc_node, child) in zip(part.cuts, cut_children):
+            cp.child_pid = len(parts)
+            build(child, pid, anc_len + len(cp.path_token_idx))
+
+    build(tree.root, -1, 0)
+    return parts
+
+
+def partition_token_counts(parts: list[TreePartition]) -> dict:
+    """Accounting for the Fig.-5 benchmark."""
+    unique = sum(int(p.ser.valid.sum()) for p in parts)
+    with_pad = sum(p.ser.n for p in parts)
+    return dict(num_partitions=len(parts), unique_tokens=unique,
+                padded_tokens=with_pad)
+
+
+def standard_partition_token_counts(tree: TrajectoryTree, capacity: int
+                                    ) -> int:
+    """Token count of *standard* tree partitioning (no differentiable
+    boundaries): each child partition re-includes all ancestor tokens
+    (recomputed) — the paper's Fig.-5 middle bar."""
+    parts = partition_tree(tree, capacity)
+    total = 0
+    for p in parts:
+        total += int(p.ser.valid.sum()) + p.anc_len
+    return total

@@ -1,0 +1,138 @@
+"""Synthetic trajectory-tree generators.
+
+Two flavors, matching the paper's experiments:
+  - ``random_tree`` / ``por_controlled_trees``: controlled-POR synthetic
+    datasets (paper §4.5, Fig. 8) — POR is tuned via shared-prefix depth.
+  - ``agentic_tree``: qualitative mimic of the real agentic rollouts in
+    Fig. 6 — long shared trunks with bursts of branching from concurrent
+    tool calls / think-mode context edits, sparse and unbalanced.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.core.tree import TreeNode, TrajectoryTree
+
+
+def random_tree(
+    rng: np.random.Generator,
+    *,
+    vocab_size: int = 256,
+    max_depth: int = 4,
+    branch_prob: float = 0.5,
+    max_children: int = 3,
+    seg_len_range: tuple[int, int] = (2, 8),
+    trained_frac: float = 0.7,
+) -> TrajectoryTree:
+    """Random tree with geometric-ish branching."""
+
+    def seg() -> tuple[np.ndarray, np.ndarray]:
+        L = int(rng.integers(*seg_len_range))
+        toks = rng.integers(0, vocab_size, L).astype(np.int32)
+        trained = rng.random(L) < trained_frac
+        return toks, trained
+
+    def rec(depth: int) -> TreeNode:
+        toks, trained = seg()
+        node = TreeNode(tokens=toks, trained=trained)
+        if depth < max_depth and rng.random() < branch_prob:
+            k = int(rng.integers(2, max_children + 1))
+            node.children = [rec(depth + 1) for _ in range(k)]
+        return node
+
+    return TrajectoryTree(root=rec(0))
+
+
+def chain_tree(rng: np.random.Generator, *, length: int = 3,
+               vocab_size: int = 256,
+               seg_len_range: tuple[int, int] = (2, 6)) -> TrajectoryTree:
+    """Degenerate tree = single path (sequence special case)."""
+    def seg() -> TreeNode:
+        L = int(rng.integers(*seg_len_range))
+        return TreeNode(tokens=rng.integers(0, vocab_size, L).astype(np.int32))
+    root = seg()
+    cur = root
+    for _ in range(length - 1):
+        nxt = seg()
+        cur.children = [nxt]
+        cur = nxt
+    return TrajectoryTree(root=root)
+
+
+def por_controlled_tree(
+    rng: np.random.Generator,
+    *,
+    target_por: float,
+    num_paths: int = 8,
+    tokens_per_path: int = 256,
+    vocab_size: int = 1024,
+) -> TrajectoryTree:
+    """K paths of equal length sharing one trunk; trunk length chosen so the
+    tree's POR ≈ target (paper §4.5 keeps leaves and total tokens fixed
+    while sweeping POR).
+
+    With trunk t and per-path tail (L−t):  flat = K·L,
+    unique = t + K·(L−t)  ⇒  POR = (K−1)·t / (K·L).
+    """
+    K, L = num_paths, tokens_per_path
+    t = int(round(target_por * K * L / (K - 1)))
+    t = max(1, min(t, L - 1))
+    trunk = TreeNode(tokens=rng.integers(0, vocab_size, t).astype(np.int32))
+    for _ in range(K):
+        tail = TreeNode(
+            tokens=rng.integers(0, vocab_size, L - t).astype(np.int32))
+        trunk.children.append(tail)
+    return TrajectoryTree(root=trunk)
+
+
+def agentic_tree(
+    rng: np.random.Generator,
+    *,
+    vocab_size: int = 32000,
+    num_turns: int = 6,
+    turn_len_range: tuple[int, int] = (64, 512),
+    tool_branch_prob: float = 0.4,
+    think_branch_prob: float = 0.3,
+    max_parallel_tools: int = 4,
+) -> TrajectoryTree:
+    """Mimics Fig. 6: a long conversation trunk; at turn boundaries the
+    trajectory may fork into parallel tool-call branches (each continuing
+    the conversation) or think-mode variants (reasoning tokens replaced
+    between turns)."""
+
+    def seg(lo_hi=turn_len_range, trained_p=0.6) -> TreeNode:
+        L = int(rng.integers(*lo_hi))
+        toks = rng.integers(0, vocab_size, L).astype(np.int32)
+        trained = rng.random(L) < trained_p
+        return TreeNode(tokens=toks, trained=trained)
+
+    def build(turn: int) -> TreeNode:
+        node = seg()
+        if turn >= num_turns:
+            return node
+        r = rng.random()
+        if r < tool_branch_prob:
+            k = int(rng.integers(2, max_parallel_tools + 1))
+            node.children = [build(turn + 1) for _ in range(k)]
+        elif r < tool_branch_prob + think_branch_prob:
+            node.children = [build(turn + 1), build(turn + 1)]
+        else:
+            node.children = [build(turn + 1)]
+        return node
+
+    return TrajectoryTree(root=build(0))
+
+
+def trees_for_batch(
+    seed: int,
+    *,
+    n_trees: int,
+    kind: str = "random",
+    **kw,
+) -> list[TrajectoryTree]:
+    rng = np.random.default_rng(seed)
+    gen = {"random": random_tree, "chain": chain_tree,
+           "por": por_controlled_tree, "agentic": agentic_tree}[kind]
+    return [gen(rng, **kw) for _ in range(n_trees)]

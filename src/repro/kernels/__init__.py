@@ -1,0 +1,3 @@
+# Pallas TPU kernels for the paper's compute hot spot: tree flash
+# attention (tree_attention.py) + jit wrapper (ops.py) + jnp oracle
+# (ref.py).  Validated with interpret=True on CPU.

@@ -1,0 +1,48 @@
+"""jit'd public wrapper for the tree-attention kernel.
+
+Dispatches to the Pallas TPU kernel on TPU backends and to interpret mode
+on CPU (kernel body executed in Python — bit-level semantics identical).
+A custom_vjp provides the backward pass by flash-style recomputation
+through the reference implementation, keeping training usable behind the
+same entry point; on TPU the forward hot path is the kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ref import tree_attention_ref
+from repro.kernels.tree_attention import tree_attention as _pallas_fwd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def tree_attention(q, k, v, kv_last, scale: float,
+                   block_q: int = 128, block_k: int = 128):
+    return _pallas_fwd(q, k, v, kv_last, scale, block_q=block_q,
+                       block_k=block_k, interpret=not _on_tpu())
+
+
+def _fwd(q, k, v, kv_last, scale, block_q, block_k):
+    o = _pallas_fwd(q, k, v, kv_last, scale, block_q=block_q,
+                    block_k=block_k, interpret=not _on_tpu())
+    return o, (q, k, v, kv_last)
+
+
+def _bwd(scale, block_q, block_k, res, do):
+    q, k, v, kv_last = res
+    # Recompute-based backward via the jnp reference (exact same mask
+    # semantics).  A dedicated Pallas dq/dk/dv kernel is a §Perf follow-up.
+    _, vjp = jax.vjp(lambda q_, k_, v_:
+                     tree_attention_ref(q_, k_, v_, kv_last, scale),
+                     q, k, v)
+    dq, dk, dv = vjp(do)
+    return dq, dk, dv, None
+
+
+tree_attention.defvjp(_fwd, _bwd)

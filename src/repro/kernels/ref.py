@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the tree flash-attention kernel.
+
+visible(i, j) ⇔ j ≤ i ∧ kv_last[j] ≥ i   (paper §3.2 tree mask, encoded as
+one int per key — see core/tree.py).  GQA by head-group broadcast.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def tree_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                       kv_last: jax.Array, scale: float) -> jax.Array:
+    """q: [B,S,H,hd]; k/v: [B,S,Kh,hd]; kv_last: [B,S] int32 → [B,S,H,hd]."""
+    B, S, H, hd = q.shape
+    Kh = k.shape[2]
+    G = H // Kh
+    qg = q.reshape(B, S, Kh, G, hd)
+    logits = jnp.einsum("bikgd,bjkd->bkgij", qg, k).astype(jnp.float32)
+    i_idx = jnp.arange(S)[:, None]
+    j_idx = jnp.arange(S)[None, :]
+    vis = (j_idx <= i_idx)[None] & (kv_last[:, None, :] >= i_idx[None])
+    logits = logits * scale + jnp.where(vis, 0.0, NEG_INF)[:, None, None]
+    w = jax.nn.softmax(logits, axis=-1)
+    # fully-masked rows (invalid queries) → zero output, not NaN
+    any_vis = vis.any(axis=-1)[:, None, None, :, None]
+    w = jnp.where(any_vis, w, 0.0)
+    o = jnp.einsum("bkgij,bjkd->bikgd", w.astype(v.dtype), v)
+    return o.reshape(B, S, H, hd)

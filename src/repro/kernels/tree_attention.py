@@ -1,0 +1,126 @@
+"""Pallas TPU kernel: tree flash attention (FlashMask → TPU adaptation).
+
+The paper implements its tree mask as a FlashAttention-V3 + FlashMask GPU
+kernel (App. A.1).  The TPU-native equivalent built here:
+
+  - visibility is one int per key: visible(i,j) ⇔ j ≤ i ∧ kv_last[j] ≥ i;
+  - grid (batch, q_head, q_blocks, kv_blocks); the innermost dim is
+    sequential on TPU, so online-softmax accumulators live in VMEM scratch
+    across kv steps;
+  - MXU-aligned blocks (default 128×128), fp32 accumulation;
+  - **block skipping**: a kv block is skipped when it is entirely
+    anti-causal (kv_start > q_end) or entirely invisible
+    (max_j kv_last[j] < q_start — every key's subtree ends before this
+    query block).  Per-block maxima are precomputed XLA-side and prefetched
+    as scalars, so the predicate is resolved before any MXU work.  This is
+    the FlashMask block-sparsity analogue; skipped blocks still have their
+    DMA issued by the pipeline (removing it needs a data-dependent grid —
+    logged as a §Perf follow-up in EXPERIMENTS.md).
+
+GQA: q head h reads kv head h // (H/Kh) via the BlockSpec index map.
+Validated on CPU with interpret=True against kernels/ref.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def tree_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                   kv_last: jax.Array, scale: float, *,
+                   block_q: int = 128, block_k: int = 128,
+                   interpret: bool = False) -> jax.Array:
+    """q: [B,S,H,hd]; k/v: [B,S,Kh,hd]; kv_last: [B,S] int32 → [B,S,H,hd]."""
+    B, S, H, hd = q.shape
+    Kh = k.shape[2]
+    G = max(1, H // Kh)
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+    nq, nk = S // block_q, S // block_k
+    kv_last = kv_last.astype(jnp.int32)
+    # skip predicate: per-(batch, kv block) max of kv_last, flattened to 1-D
+    # for scalar prefetch; indexed with b*nk + ki inside the kernel.
+    kv_last_max_flat = kv_last.reshape(B, nk, block_k).max(-1).reshape(B * nk)
+
+    def kernel(kmax_ref, q_ref, k_ref, v_ref, kl_ref, o_ref,
+               m_scr, l_scr, acc_scr):
+        b = pl.program_id(0)
+        qi = pl.program_id(2)
+        ki = pl.program_id(3)
+        num_kv = pl.num_programs(3)
+        q_start = qi * block_q
+        q_end = q_start + block_q - 1
+        kv_start = ki * block_k
+
+        @pl.when(ki == 0)
+        def _init():
+            m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+            l_scr[...] = jnp.zeros_like(l_scr)
+            acc_scr[...] = jnp.zeros_like(acc_scr)
+
+        block_max = kmax_ref[b * nk + ki]
+        live = (kv_start <= q_end) & (block_max >= q_start)
+
+        @pl.when(live)
+        def _compute():
+            qq = q_ref[0, :, 0, :].astype(jnp.float32)       # [BQ, hd]
+            kk = k_ref[0, :, 0, :].astype(jnp.float32)       # [BK, hd]
+            vv = v_ref[0, :, 0, :].astype(jnp.float32)
+            kl = kl_ref[0, :]                                # [BK]
+            logits = jax.lax.dot_general(
+                qq, kk, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32) * scale
+            i_idx = q_start + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            j_idx = kv_start + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            vis = (j_idx <= i_idx) & (kl[None, :] >= i_idx)
+            lg = jnp.where(vis, logits, NEG_INF)
+            m_prev = m_scr[...]
+            m_new = jnp.maximum(m_prev, lg.max(axis=1))
+            p = jnp.where(vis, jnp.exp(lg - m_new[:, None]), 0.0)
+            corr = jnp.exp(m_prev - m_new)
+            l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
+            acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+                p, vv, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            m_scr[...] = m_new
+
+        @pl.when(ki == num_kv - 1)
+        def _finalize():
+            l = l_scr[...]
+            o = acc_scr[...] / jnp.maximum(l, 1e-37)[:, None]
+            o = jnp.where((l > 0)[:, None], o, 0.0)
+            o_ref[0, :, 0, :] = o.astype(o_ref.dtype)
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B, H, nq, nk),
+            in_specs=[
+                pl.BlockSpec((1, block_q, 1, hd),
+                             lambda b, h, qi, ki, kmax: (b, qi, h, 0)),
+                pl.BlockSpec((1, block_k, 1, hd),
+                             lambda b, h, qi, ki, kmax: (b, ki, h // G, 0)),
+                pl.BlockSpec((1, block_k, 1, hd),
+                             lambda b, h, qi, ki, kmax: (b, ki, h // G, 0)),
+                pl.BlockSpec((1, block_k),
+                             lambda b, h, qi, ki, kmax: (b, ki)),
+            ],
+            out_specs=pl.BlockSpec((1, block_q, 1, hd),
+                                   lambda b, h, qi, ki, kmax: (b, qi, h, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((block_q,), jnp.float32),
+                pltpu.VMEM((block_q,), jnp.float32),
+                pltpu.VMEM((block_q, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, S, H, hd), q.dtype),
+        interpret=interpret,
+    )(kv_last_max_flat, q, k, v, kv_last)

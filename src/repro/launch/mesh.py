@@ -1,0 +1,34 @@
+"""Production mesh builders.
+
+Single pod: 16×16 = 256 chips, (data, model).
+Multi-pod:  2×16×16 = 512 chips, (pod, data, model) — the "pod" axis is a
+second data-parallel dimension whose collectives cross the inter-pod DCI.
+
+Functions, not module constants: importing this module must not touch jax
+device state (the dry-run sets XLA_FLAGS before any jax import).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False,
+                         shape: tuple[int, ...] | None = None):
+    """shape: optional (data, model) override for the 256 chips of one pod
+    — the §Perf mesh-shape experiments (e.g. (64, 4) or (256, 1) for
+    FSDP-dominant layouts on ≤8B dense models)."""
+    if shape is not None:
+        assert not multi_pod and len(shape) == 2
+        return jax.make_mesh(shape, ("data", "model"))
+    mshape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(mshape, axes)
+
+
+def data_axes(multi_pod: bool = False) -> tuple[str, ...]:
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def make_host_mesh():
+    """1-device mesh for CPU smoke runs of the launcher."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,103 @@
+"""Training launcher.
+
+Runs tree-training (or the sep-avg baseline) on synthetic agentic trees:
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-8b --smoke \\
+      --steps 50 --mode tree
+
+``--mesh host`` (default) runs on the local device(s); ``--mesh single``/
+``multi`` builds the production mesh (requires the dry-run's fake-device
+env when not on a real pod — intended for lowering checks; real training
+on hardware uses the same code path).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro import sharding as sh
+from repro.configs import get_config
+from repro.data.loader import LoaderConfig, batches
+from repro.launch.mesh import data_axes, make_host_mesh, \
+    make_production_mesh
+from repro.models.model import init_params
+from repro.train.checkpoint import save_checkpoint
+from repro.train.optimizer import OptimizerConfig, init_opt_state
+from repro.train.train_step import make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--mode", default="tree", choices=["tree", "baseline"])
+    ap.add_argument("--seq-len", type=int, default=512)
+    ap.add_argument("--rows", type=int, default=2)
+    ap.add_argument("--trees", type=int, default=6)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--impl", default="ref",
+                    choices=["ref", "chunked", "pallas"])
+    ap.add_argument("--mesh", default="host",
+                    choices=["host", "single", "multi"])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--save", default=None)
+    ap.add_argument("--log-every", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    print(f"[train] arch={cfg.name} family={cfg.family} mode={args.mode} "
+          f"impl={args.impl}")
+
+    if args.mesh == "host":
+        mesh, daxes = make_host_mesh(), ("data",)
+    else:
+        mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+        daxes = data_axes(args.mesh == "multi")
+
+    opt_cfg = OptimizerConfig(lr=args.lr, total_steps=args.steps,
+                              warmup_steps=max(2, args.steps // 10))
+    lc = LoaderConfig(seq_len=args.seq_len, batch_rows=args.rows,
+                      trees_per_batch=args.trees, mode=args.mode,
+                      kind="agentic", seed=args.seed,
+                      gen_kwargs=dict(turn_len_range=(8, 48),
+                                      num_turns=4))
+
+    with sh.use_mesh(mesh, data_axes=daxes):
+        params = init_params(cfg, jax.random.key(args.seed))
+        opt_state = init_opt_state(params)
+        step_fn = make_train_step(cfg, opt_cfg, impl=args.impl)
+
+        tokens_done = 0
+        t0 = time.time()
+        history = []
+        for i, (inputs, tb) in enumerate(batches(cfg, lc, args.steps)):
+            ts = time.time()
+            params, opt_state, m = step_fn(params, opt_state, inputs)
+            loss = float(m["total"])
+            dt = time.time() - ts
+            tokens_done += int(tb.valid.sum())
+            history.append({"step": i, "loss": loss, "sec": dt})
+            if i % args.log_every == 0:
+                print(f"step {i:4d} loss {loss:10.4f} "
+                      f"nll/tok {float(m['token_nll_mean']):7.4f} "
+                      f"gnorm {float(m['grad_norm']):8.3f} {dt * 1e3:7.1f}ms",
+                      flush=True)
+        wall = time.time() - t0
+        print(f"[train] {len(history)} steps, {tokens_done} unique tokens, "
+              f"{wall:.1f}s wall")
+        if args.save:
+            save_checkpoint(args.save, params, opt_state,
+                            meta={"arch": cfg.name, "steps": len(history)})
+            with open(args.save + "/history.json", "w") as f:
+                json.dump(history, f)
+            print(f"[train] saved → {args.save}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,300 @@
+"""Tree-aware GQA attention.
+
+The tree attention mask (paper §3.2, Fig. 3) is driven entirely by the
+per-key bound ``kv_last``:   visible(i, j) ⇔ j ≤ i ∧ kv_last[j] ≥ i.
+Plain causal batches are the special case ``kv_last[j] = end-of-segment``,
+so baseline and tree mode share one code path.
+
+Implementations:
+  - 'ref'     : materialized mask (oracle; small shapes / tests)
+  - 'chunked' : lax.scan over KV blocks with online softmax — bounded
+                memory; the XLA path used for dry-runs and large shapes.
+  - 'pallas'  : kernels/tree_attention.py (TPU target; FlashMask-style
+                block skipping).  Falls back to interpret mode on CPU.
+
+Sliding-window attention restricts additionally to pos_i − pos_j < window
+(positions, not DFS indices — window applies along the *path*).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttnCfg
+from repro.models.layers import _dense_init, init_rmsnorm, rmsnorm, rope
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg: AttnCfg, d_model: int, dtype=jnp.float32,
+                   cross: bool = False) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], (d_model, cfg.q_dim), dtype=dtype),
+        "wk": _dense_init(ks[1], (d_model, cfg.kv_dim), dtype=dtype),
+        "wv": _dense_init(ks[2], (d_model, cfg.kv_dim), dtype=dtype),
+        "wo": _dense_init(ks[3], (cfg.q_dim, d_model), dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim,), dtype)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), dtype)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), dtype)
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = init_rmsnorm(cfg.head_dim, dtype)
+        p["k_norm"] = init_rmsnorm(cfg.head_dim, dtype)
+    return p
+
+
+def _project_qkv(params: dict, cfg: AttnCfg, x: jax.Array,
+                 x_kv: Optional[jax.Array] = None):
+    B, S, _ = x.shape
+    x_kv = x if x_kv is None else x_kv
+    Skv = x_kv.shape[1]
+    q = x @ params["wq"]
+    k = x_kv @ params["wk"]
+    v = x_kv @ params["wv"]
+    if "bq" in params:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(B, Skv, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(B, Skv, cfg.n_kv_heads, cfg.head_dim)
+    if "q_norm" in params:
+        q = rmsnorm(params["q_norm"], q)
+        k = rmsnorm(params["k_norm"], k)
+    return q, k, v
+
+
+def _scale(cfg: AttnCfg) -> float:
+    return cfg.softmax_scale or cfg.head_dim ** -0.5
+
+
+def _tree_bias(i_idx, kv_last, pos_q, pos_k, window, bidirectional, valid_k):
+    """Additive mask bias [B, 1, 1, Sq, Sk] from tree metadata."""
+    if bidirectional:
+        vis = valid_k[:, None, :]
+    else:
+        j_idx = jnp.arange(kv_last.shape[-1])
+        vis = (j_idx[None, None, :] <= i_idx[None, :, None]) & \
+              (kv_last[:, None, :] >= i_idx[None, :, None])
+        if window is not None:
+            d = pos_q[:, :, None] - pos_k[:, None, :]
+            vis = vis & (d < window)
+    return jnp.where(vis, 0.0, NEG_INF)[:, None, None]  # [B,1,1,Sq,Sk]
+
+
+def _attend_ref(q, k, v, bias, scale):
+    B, S, H, hd = q.shape
+    Kh = k.shape[2]
+    G = H // Kh
+    qg = q.reshape(B, S, Kh, G, hd)
+    logits = jnp.einsum("bikgd,bjkd->bkgij", qg, k).astype(jnp.float32)
+    logits = logits * scale + bias
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgij,bjkd->bikgd", w.astype(v.dtype), v)
+    return o.reshape(B, S, H, hd)
+
+
+def _attend_chunked(q, k, v, i_idx, kv_last, pos_q, pos_k, window,
+                    bidirectional, valid_k, scale, kv_chunk=1024):
+    """Online-softmax over KV chunks — memory O(S·kv_chunk)."""
+    B, S, H, hd = q.shape
+    Skv, Kh = k.shape[1], k.shape[2]
+    G = H // Kh
+    kv_chunk = min(kv_chunk, Skv)
+    while Skv % kv_chunk != 0:          # e.g. gateway-extended KV lengths
+        kv_chunk -= 1
+    n_chunks = Skv // kv_chunk
+    qg = q.reshape(B, S, Kh, G, hd)
+
+    kc = k.reshape(B, n_chunks, kv_chunk, Kh, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, kv_chunk, Kh, hd).transpose(1, 0, 2, 3, 4)
+    klc = kv_last.reshape(B, n_chunks, kv_chunk).transpose(1, 0, 2)
+    pkc = pos_k.reshape(B, n_chunks, kv_chunk).transpose(1, 0, 2)
+    vkc = valid_k.reshape(B, n_chunks, kv_chunk).transpose(1, 0, 2)
+    j_base = jnp.arange(n_chunks) * kv_chunk
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kj, vj, klj, pkj, vkj, j0 = inp
+        logits = jnp.einsum("bikgd,bjkd->bkgij", qg, kj).astype(jnp.float32)
+        logits = logits * scale
+        if bidirectional:
+            vis = vkj[:, None, :]
+        else:
+            jj = j0 + jnp.arange(kv_chunk)
+            vis = (jj[None, None, :] <= i_idx[None, :, None]) & \
+                  (klj[:, None, :] >= i_idx[None, :, None])
+            if window is not None:
+                d = pos_q[:, :, None] - pkj[:, None, :]
+                vis = vis & (d < window)
+        logits = logits + jnp.where(vis, 0.0, NEG_INF)[:, None, None]
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgij,bjkd->bkgid", p.astype(vj.dtype), vj).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Kh, G, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Kh, G, S), jnp.float32)
+    a0 = jnp.zeros((B, Kh, G, S, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (kc, vc, klc, pkc, vkc, j_base))
+    o = acc / jnp.maximum(l[..., None], 1e-37)
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, S, H, hd).astype(q.dtype)
+
+
+BIG = 1 << 30
+
+
+def attention(
+    params: dict,
+    cfg: AttnCfg,
+    x: jax.Array,
+    *,
+    pos_ids: jax.Array,
+    kv_last: jax.Array,
+    valid: jax.Array,
+    impl: str = "ref",
+    bidirectional: bool = False,
+    cross_kv: Optional[tuple[jax.Array, jax.Array]] = None,
+    cross_valid: Optional[jax.Array] = None,
+    extra_kv: Optional[dict] = None,
+    capture_idx: Optional[dict] = None,
+) -> jax.Array | tuple[jax.Array, dict]:
+    """Full-sequence (train/prefill) attention.
+
+    cross_kv: pre-projected (k, v) from an encoder → cross-attention
+    (mask = cross_valid only; branch-independent, paper §5 table).
+    extra_kv: partition-gateway ancestor KV — dict(k, v, pos) with
+    k/v [B, A, Kh, hd] *already roped* in the parent partition; ancestors
+    are visible to every query (they precede the partition root).
+    capture_idx: dict name → static index array; returns per-cut
+    (k, v) slices at those DFS positions (relayed to child partitions).
+    """
+    B, S, _ = x.shape
+    if cross_kv is not None:
+        q = (x @ params["wq"]).reshape(B, S, cfg.n_heads, cfg.head_dim)
+        k, v = cross_kv
+        bias = jnp.where(cross_valid[:, None, :], 0.0,
+                         NEG_INF)[:, None, None]
+        o = _attend_ref(q, k, v, bias, _scale(cfg))
+        return o.reshape(B, S, -1) @ params["wo"]
+
+    q, k, v = _project_qkv(params, cfg, x)
+    if not bidirectional:
+        q = rope(q, pos_ids, cfg.rope_theta)
+        k = rope(k, pos_ids, cfg.rope_theta)
+
+    caps = None
+    if capture_idx is not None:
+        caps = {name: {"k": k[:, idx], "v": v[:, idx]}
+                for name, idx in capture_idx.items()}
+
+    kq_off = 0
+    k_all, v_all, kl_all, pos_k = k, v, kv_last, pos_ids
+    if extra_kv is not None:
+        A = extra_kv["k"].shape[1]
+        kq_off = A
+        k_all = jnp.concatenate([extra_kv["k"].astype(k.dtype), k], axis=1)
+        v_all = jnp.concatenate([extra_kv["v"].astype(v.dtype), v], axis=1)
+        kl_all = jnp.concatenate(
+            [jnp.full((B, A), BIG, jnp.int32),
+             jnp.where(kv_last >= 0, kv_last + A, -1)], axis=1)
+        pos_k = jnp.concatenate([extra_kv["pos"], pos_ids], axis=1)
+
+    i_idx = kq_off + jnp.arange(S)
+    if impl == "ref":
+        bias = _tree_bias(i_idx, kl_all, pos_ids, pos_k, cfg.window,
+                          bidirectional, valid)
+        o = _attend_ref(q, k_all, v_all, bias, _scale(cfg))
+    elif impl == "chunked":
+        valid_k = valid if extra_kv is None else jnp.concatenate(
+            [jnp.ones((B, kq_off), bool), valid], axis=1)
+        o = _attend_chunked(q, k_all, v_all, i_idx, kl_all, pos_ids, pos_k,
+                            cfg.window, bidirectional, valid_k, _scale(cfg))
+    elif impl == "pallas":
+        from repro.kernels.ops import tree_attention as pallas_attn
+        if extra_kv is not None:
+            raise NotImplementedError(
+                "pallas impl + partition gateway: use 'chunked'")
+        o = pallas_attn(q, k, v, kv_last, _scale(cfg))
+    else:
+        raise ValueError(impl)
+    y = o.reshape(B, S, -1) @ params["wo"]
+    if capture_idx is not None:
+        return y, caps
+    return y
+
+
+def project_cross_kv(params: dict, cfg: AttnCfg, enc_out: jax.Array):
+    B, T, _ = enc_out.shape
+    k = (enc_out @ params["wk"]).reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
+    v = (enc_out @ params["wv"]).reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
+    if "bk" in params:
+        k = k + params["bk"].reshape(1, 1, cfg.n_kv_heads, cfg.head_dim)
+        v = v + params["bv"].reshape(1, 1, cfg.n_kv_heads, cfg.head_dim)
+    return k, v
+
+
+# --------------------------------------------------------------------------
+# Decode path — ring-buffer KV cache (full or sliding window)
+# --------------------------------------------------------------------------
+
+def init_kv_cache(batch: int, buf_len: int, cfg: AttnCfg,
+                  dtype=jnp.bfloat16) -> dict:
+    return {
+        "k": jnp.zeros((batch, buf_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, buf_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "pos": jnp.full((batch, buf_len), -1, jnp.int32),
+    }
+
+
+def decode_attention(params: dict, cfg: AttnCfg, x: jax.Array,
+                     cache: dict, pos: jax.Array, write_idx: jax.Array,
+                     cross_cache: Optional[dict] = None
+                     ) -> tuple[jax.Array, dict]:
+    """One-token decode.  x: [B, 1, D]; pos: [B] position ids of the new
+    token; write_idx: scalar ring-buffer slot.  Returns (y, new_cache)."""
+    B = x.shape[0]
+    q, k_new, v_new = _project_qkv(params, cfg, x)
+    q = rope(q, pos[:, None], cfg.rope_theta)
+    k_new = rope(k_new, pos[:, None], cfg.rope_theta)
+
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"],
+                                            k_new.astype(cache["k"].dtype),
+                                            write_idx, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"],
+                                            v_new.astype(cache["v"].dtype),
+                                            write_idx, axis=1)
+    cpos = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], pos[:, None], write_idx, axis=1)
+
+    vis = (cpos >= 0) & (cpos <= pos[:, None])
+    if cfg.window is not None:
+        vis = vis & (pos[:, None] - cpos < cfg.window)
+    bias = jnp.where(vis, 0.0, NEG_INF)[:, None, None]  # [B,1,1,T]
+    B_, T = cpos.shape
+    Kh, G = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(B, 1, Kh, G, cfg.head_dim)
+    logits = jnp.einsum("bikgd,bjkd->bkgij", qg,
+                        k.astype(q.dtype)).astype(jnp.float32)
+    logits = logits * _scale(cfg) + bias[..., None, :]
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgij,bjkd->bikgd", w.astype(v.dtype), v)
+    o = o.reshape(B, 1, cfg.q_dim)
+
+    if cross_cache is not None:
+        qc = (x @ params["wq"]).reshape(B, 1, cfg.n_heads, cfg.head_dim)
+        cb = jnp.where(cross_cache["valid"][:, None, :], 0.0,
+                       NEG_INF)[:, None, None]
+        oc = _attend_ref(qc, cross_cache["k"], cross_cache["v"], cb,
+                         _scale(cfg))
+        o = o + oc.reshape(B, 1, cfg.q_dim)
+
+    y = o @ params["wo"]
+    return y, {"k": k, "v": v, "pos": cpos}

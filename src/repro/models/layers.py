@@ -1,0 +1,192 @@
+"""Shared layer primitives: norms, RoPE, MLPs, embeddings.
+
+Functional style: every layer is ``init_*(key, ...) -> params`` plus an
+apply function taking ``(params, x, ...)``.  Params are plain dicts of
+jnp arrays so they stack cleanly for ``lax.scan`` over layers and map
+directly onto sharding rules (repro/sharding.py).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _dense_init(key, shape, scale: Optional[float] = None, dtype=jnp.float32):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# RMSNorm
+# --------------------------------------------------------------------------
+
+def init_rmsnorm(dim: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# --------------------------------------------------------------------------
+# RoPE — applied per explicit position id (depth positions for tree mode)
+# --------------------------------------------------------------------------
+
+def rope(x: jax.Array, pos_ids: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, hd]; pos_ids: [..., S] int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = pos_ids[..., :, None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(ang)[..., :, None, :]                      # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin,
+                           xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, activation: str,
+             bias: bool = False, dtype=jnp.float32) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: dict = {}
+    if activation == "swiglu":
+        p["wi_gate"] = _dense_init(k1, (d_model, d_ff), dtype=dtype)
+        p["wi_up"] = _dense_init(k2, (d_model, d_ff), dtype=dtype)
+    else:
+        p["wi_up"] = _dense_init(k2, (d_model, d_ff), dtype=dtype)
+    p["wo"] = _dense_init(k3, (d_ff, d_model), dtype=dtype)
+    if bias:
+        p["bi"] = jnp.zeros((d_ff,), dtype)
+        p["bo"] = jnp.zeros((d_model,), dtype)
+    return p
+
+
+def mlp(params: dict, x: jax.Array, activation: str) -> jax.Array:
+    if activation == "swiglu":
+        g = x @ params["wi_gate"]
+        u = x @ params["wi_up"]
+        h = jax.nn.silu(g) * u
+    elif activation == "squared_relu":
+        h = x @ params["wi_up"]
+        if "bi" in params:
+            h = h + params["bi"]
+        r = jax.nn.relu(h)
+        h = r * r
+    elif activation == "relu":
+        h = jax.nn.relu(x @ params["wi_up"])
+    else:
+        raise ValueError(activation)
+    y = h @ params["wo"]
+    if "bo" in params:
+        y = y + params["bo"]
+    return y
+
+
+# --------------------------------------------------------------------------
+# Embedding / LM head
+# --------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d_model: int, dtype=jnp.float32) -> dict:
+    return {"table": _dense_init(key, (vocab, d_model), scale=1.0, dtype=dtype)}
+
+
+def embed(params: dict, tokens: jax.Array) -> jax.Array:
+    return params["table"][tokens]
+
+
+def logits_from_hidden(emb_params: dict, head_params: Optional[dict],
+                       h: jax.Array) -> jax.Array:
+    """LM head; tied embeddings when head_params is None."""
+    w = emb_params["table"].T if head_params is None else head_params["w"]
+    return (h @ w.astype(h.dtype)).astype(jnp.float32)
+
+
+def init_lm_head(key, d_model: int, vocab: int, dtype=jnp.float32) -> dict:
+    return {"w": _dense_init(key, (d_model, vocab), dtype=dtype)}
+
+
+# --------------------------------------------------------------------------
+# Tree-aware gathers (token shift / causal conv by path predecessor)
+# --------------------------------------------------------------------------
+
+def gather_prev(x: jax.Array, prev_idx: jax.Array,
+                ctx: Optional[jax.Array] = None) -> jax.Array:
+    """x: [B, S, D]; prev_idx: [B, S].
+
+    Index semantics: ≥0 → x row; −1 → no predecessor (zeros);
+    −(2+j) → gateway context ``ctx[:, Tc−1−j]`` (partition boundaries:
+    slot −2 is the immediate relayed ancestor, −3 the one before, …).
+
+    Returns x at each token's *path predecessor* — the tree-correct
+    replacement for `roll(x, 1)` token-shift, exact across branch *and
+    partition* boundaries because prev_idx follows the tree, not DFS order.
+    """
+    safe = jnp.maximum(prev_idx, 0)
+    # (A vmap-over-batch formulation was tried for pjit friendliness and
+    # lowers to the *identical* partitioned HLO — §Perf rwkv6 iter log.)
+    g = jnp.take_along_axis(x, safe[..., None], axis=1)
+    out = jnp.where((prev_idx >= 0)[..., None], g, 0.0)
+    if ctx is not None:
+        Tc = ctx.shape[1]
+        ci = Tc + prev_idx + 1                 # −2 → Tc−1, −3 → Tc−2, …
+        in_ctx = (prev_idx <= -2) & (ci >= 0)
+        gc = jnp.take_along_axis(ctx.astype(x.dtype),
+                                 jnp.clip(ci, 0, Tc - 1)[..., None], axis=1)
+        out = jnp.where(in_ctx[..., None], gc, out)
+    return out.astype(x.dtype)
+
+
+def prev_powers(prev_idx: np.ndarray, k: int) -> np.ndarray:
+    """Host-side: indices of the 1..k-th path-predecessors. [B, S, k].
+
+    conv window for token t = x[prev^k(t)], ..., x[prev^1(t)], x[t] — the
+    tree-correct causal-conv context (paper §3.2(ii)) as pure gathers.
+    Gateway slots chain: prev(−(2+j)) = −(3+j); prev(−1) = −1.
+    """
+    B, S = prev_idx.shape
+    out = np.full((B, S, k), -1, dtype=np.int32)
+    cur = prev_idx.copy()
+    for j in range(k):
+        out[:, :, j] = cur
+        nxt = np.where(cur <= -2, cur - 1, -1).astype(np.int32)
+        valid = cur >= 0
+        rows = np.broadcast_to(np.arange(B)[:, None], cur.shape)
+        nxt[valid] = prev_idx[rows[valid], cur[valid]]
+        cur = nxt
+    return out
+
+
+def tree_causal_conv(x: jax.Array, conv_w: jax.Array,
+                     conv_b: Optional[jax.Array],
+                     prev_pows: jax.Array,
+                     ctx: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv along the *tree path* via predecessor gathers.
+
+    x: [B, S, D]; conv_w: [K, D] (tap K−1 is the current token);
+    prev_pows: [B, S, K−1] int32 (prev^1 ... prev^(K−1));
+    ctx: optional [B, ≥K−1, D] relayed ancestor values for gateway slots.
+    Equivalent to causal_conv1d on each root-to-leaf path independently.
+    """
+    K = conv_w.shape[0]
+    acc = x * conv_w[K - 1]
+    for j in range(K - 1):
+        # tap K-2-j multiplies prev^{j+1}
+        xs = gather_prev(x, prev_pows[..., j], ctx)
+        acc = acc + xs * conv_w[K - 2 - j]
+    if conv_b is not None:
+        acc = acc + conv_b
+    return acc

@@ -1,0 +1,101 @@
+"""Tree-aware chunked scan for recurrent (SSM / linear-attention) layers.
+
+Paper §3.2 (SSM Layers): under DFS serialization the *sequential* chunk
+state flow is wrong — after a leaf the next chunk is a sibling, not a
+descendant.  Tree routing fixes it: chunk c reads its initial state from
+``chunk_parent[c]`` (−1 = zero/initial state).  DFS pre-order guarantees
+the parent state is already computed; sibling chunks read the *same*
+parent state tensor, so their gradient contributions accumulate there
+automatically (here: through the gather's transpose — a scatter-add).
+
+The harness is layer-agnostic: mamba2 / rwkv6 / gdn supply a
+``chunk_step(state, xs_c) -> (y_c, state_out)`` and get tree routing,
+state capture (for partition gateways) and the all-states buffer for free.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _gather_state(buf: Any, idx: jax.Array, one_hot: bool = True) -> Any:
+    """buf leaf: [B, C+1, ...]; idx: [B] → state pytree [B, ...].
+
+    Default = one-hot contraction rather than a gather: under pjit the
+    dynamic gather made GSPMD emit an all-gather + all-reduce *inside the
+    chunk scan* (×layers×chunks — §Perf rwkv6 iter 5); the one-hot einsum
+    is sharding-transparent (contraction over the local, replicated C+1
+    dim) at negligible FLOPs ((C+1)·|state| per step)."""
+    if one_hot:
+        C1 = jax.tree.leaves(buf)[0].shape[1]
+        oh = jax.nn.one_hot(idx, C1, dtype=jnp.float32)      # [B, C+1]
+
+        def g(b):
+            return jnp.einsum("bc,bc...->b...", oh.astype(b.dtype), b)
+        return jax.tree.map(g, buf)
+
+    def g(b):
+        ix = idx.reshape((-1,) + (1,) * (b.ndim - 1))
+        return jnp.take_along_axis(b, ix, axis=1).squeeze(1)
+    return jax.tree.map(g, buf)
+
+
+def tree_chunk_scan(
+    chunk_step: Callable[[Any, Any], tuple[Any, Any]],
+    zero_state: Any,
+    xs: Any,
+    chunk_parent: jax.Array,
+    initial_state: Optional[Any] = None,
+) -> tuple[Any, Any]:
+    """Run ``chunk_step`` over chunks with tree state routing.
+
+    zero_state: pytree of [B, ...] zeros (dtype/shape template).
+    xs: pytree of [B, C, L, ...] per-chunk inputs.
+    chunk_parent: [B, C] int32; −1 reads the initial state.
+    initial_state: optional pytree [B, ...] injected at slot 0 — the SSM
+      partition-gateway injection point (paper App. B.7): root chunks of a
+      child partition read the parent partition's relayed state here.
+
+    Returns (ys [B, C, L, ...], all_states buffer [B, C+1, ...]) — the
+    buffer is differentiable and slots can be captured for gateways.
+    """
+    C = chunk_parent.shape[1]
+    init = zero_state if initial_state is None else initial_state
+
+    def mkbuf(z):
+        buf = jnp.zeros((z.shape[0], C + 1) + z.shape[1:], z.dtype)
+        return buf.at[:, 0].set(z)
+
+    buf0 = jax.tree.map(mkbuf, init)
+
+    xs_t = jax.tree.map(lambda a: jnp.moveaxis(a, 1, 0), xs)  # [C, B, L, ...]
+    cp_t = jnp.moveaxis(chunk_parent, 1, 0)                   # [C, B]
+
+    def body(carry, inp):
+        buf, c = carry
+        x_c, parent = inp
+        s_in = _gather_state(buf, parent + 1)
+        y_c, s_out = chunk_step(s_in, x_c)
+        buf = jax.tree.map(
+            lambda b, s: jax.lax.dynamic_update_slice_in_dim(
+                b, s[:, None].astype(b.dtype), c + 1, axis=1),
+            buf, s_out)
+        return (buf, c + 1), y_c
+
+    (buf, _), ys = jax.lax.scan(body, (buf0, 0), (xs_t, cp_t))
+    ys = jax.tree.map(lambda a: jnp.moveaxis(a, 0, 1), ys)    # [B, C, L, ...]
+    return ys, buf
+
+
+def chunkify(x: jax.Array, chunk: int) -> jax.Array:
+    """[B, S, ...] → [B, C, chunk, ...]."""
+    B, S = x.shape[:2]
+    assert S % chunk == 0, (S, chunk)
+    return x.reshape(B, S // chunk, chunk, *x.shape[2:])
+
+
+def unchunkify(x: jax.Array) -> jax.Array:
+    B, C, L = x.shape[:3]
+    return x.reshape(B, C * L, *x.shape[3:])

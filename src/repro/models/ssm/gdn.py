@@ -1,0 +1,192 @@
+"""Gated Delta Net (GDN) — the paper's hybrid-model SSM (App. A.2/A.3).
+
+Per-token recurrence (defines the semantics; the chunked form below is the
+paper's Appendix-A algorithm ported from PyTorch to JAX):
+
+    S_t  = exp(g_t) · S_{t−1}
+    err  = k_t · S_t − v_t                       (delta rule)
+    S_t  = S_t − β_t · k_tᵀ ⊗ err
+    o_t  = q_t · S_t                             (post-update read)
+
+The within-chunk correction matrix T = (I − A)⁻¹ with A = strict-lower
+(β k kᵀ ⊙ decay) is computed with a unit-lower-triangular solve instead of
+the paper's Python row recursion — identical result, MXU-friendly.
+
+Tree adaptation = chunk-level parent state routing (tree_chunk_scan) plus
+the path-predecessor causal conv, exactly as the paper's
+``torch_chunk_gated_delta_rule_tree_varlen`` + ``_tree_correct_conv_varlen``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMCfg
+from repro.models.layers import (_dense_init, init_rmsnorm, rmsnorm,
+                                 tree_causal_conv)
+from repro.models.ssm.common import chunkify, tree_chunk_scan, unchunkify
+
+
+def init_gdn(key, cfg: SSMCfg, d_model: int, dtype=jnp.float32) -> dict:
+    di = cfg.d_inner(d_model)
+    H = cfg.n_heads(d_model)
+    hd, K = cfg.head_dim, cfg.conv_kernel
+    ks = jax.random.split(key, 8)
+    # q, k, v of head_dim each; z gate; per-head a (decay), beta
+    return {
+        "wq": _dense_init(ks[0], (d_model, di), dtype=dtype),
+        "wk": _dense_init(ks[1], (d_model, di), dtype=dtype),
+        "wv": _dense_init(ks[2], (d_model, di), dtype=dtype),
+        "wz": _dense_init(ks[3], (d_model, di), dtype=dtype),
+        "wa": _dense_init(ks[4], (d_model, H), scale=0.1, dtype=dtype),
+        "wb": _dense_init(ks[5], (d_model, H), scale=0.1, dtype=dtype),
+        "a_bias": jnp.zeros((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "conv_w": _dense_init(ks[6], (K, 3 * di), scale=0.5, dtype=dtype),
+        "conv_b": jnp.zeros((3 * di,), dtype),
+        "norm": init_rmsnorm(di, dtype),
+        "out_proj": _dense_init(ks[7], (di, d_model), dtype=dtype),
+    }
+
+
+def _gdn_chunk_step(s_in, xs):
+    """s_in: [B,H,hd,hd] (k-dim × v-dim).
+    xs: (q,k,v [B,L,H,hd], g [B,L,H] log-decay ≤ 0, beta [B,L,H])."""
+    q, k, v, g, beta = xs
+    B, L, H, hd = q.shape
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    gf, bf = g.astype(jnp.float32), beta.astype(jnp.float32)
+    cw = jnp.cumsum(gf, axis=1)                          # [B,L,H] inclusive
+    v_beta = vf * bf[..., None]
+    k_beta = kf * bf[..., None]
+    tri_inc = jnp.tril(jnp.ones((L, L), bool))           # incl. diag
+    tri_exc = jnp.tril(jnp.ones((L, L), bool), k=-1)
+    decay = jnp.exp(cw[:, :, None] - cw[:, None])        # [B,i,j,H]
+    # A = strict-lower −(k_beta kᵀ ⊙ decay)  (paper's attn_raw);
+    # T = (I − A)⁻¹ via unit-lower-triangular solve
+    kk = jnp.einsum("bihd,bjhd->bhij", k_beta, kf)
+    A = jnp.where(tri_exc[None, None], -kk * decay.transpose(0, 3, 1, 2), 0.0)
+    eye = jnp.eye(L, dtype=jnp.float32)
+    T = jax.scipy.linalg.solve_triangular(
+        eye[None, None] - A, jnp.broadcast_to(eye, A.shape), lower=True,
+        unit_diagonal=True)
+    value_corr = jnp.einsum("bhij,bjhd->bihd", T, v_beta)
+    k_cumdecay = jnp.einsum("bhij,bjhd->bihd", T,
+                            k_beta * jnp.exp(cw)[..., None])
+    v_prime = jnp.einsum("bihd,bhde->bihe", k_cumdecay,
+                         s_in.astype(jnp.float32))
+    v_new = value_corr - v_prime
+    attn_within = jnp.where(tri_inc[None, None],
+                            jnp.einsum("bihd,bjhd->bhij", qf, kf)
+                            * decay.transpose(0, 3, 1, 2), 0.0)
+    attn_inter = jnp.einsum("bihd,bhde->bihe", qf * jnp.exp(cw)[..., None],
+                            s_in.astype(jnp.float32))
+    out = attn_inter + jnp.einsum("bhij,bjhe->bihe", attn_within, v_new)
+    # state update
+    wL = cw[:, -1]                                       # [B,H]
+    s_out = (s_in.astype(jnp.float32) * jnp.exp(wL)[..., None, None]
+             + jnp.einsum("bjhd,bjhe->bhde",
+                          kf * jnp.exp(wL[:, None] - cw)[..., None], v_new))
+    return out, s_out
+
+
+def gdn(
+    params: dict,
+    cfg: SSMCfg,
+    x: jax.Array,
+    *,
+    chunk_parent: jax.Array,
+    prev_pows: jax.Array,
+    valid: jax.Array,
+    initial_state: Optional[dict] = None,
+    conv_ctx: Optional[jax.Array] = None,
+    capture: Optional[dict] = None,
+    return_states: bool = False,
+):
+    B, S, D = x.shape
+    di = cfg.d_inner(D)
+    H, hd, K = cfg.n_heads(D), cfg.head_dim, cfg.conv_kernel
+
+    qkv_pre = jnp.concatenate(
+        [x @ params["wq"], x @ params["wk"], x @ params["wv"]], axis=-1)
+    qkv = jax.nn.silu(tree_causal_conv(
+        qkv_pre, params["conv_w"], params["conv_b"], prev_pows[..., :K - 1],
+        conv_ctx))
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, H, hd)
+    k = k / jnp.maximum(jnp.linalg.norm(k.astype(jnp.float32), axis=-1,
+                                        keepdims=True), 1e-6).astype(k.dtype)
+    v = v.reshape(B, S, H, hd)
+    g = -jnp.exp(params["a_bias"]) * jax.nn.softplus(
+        (x @ params["wa"]).astype(jnp.float32) + params["dt_bias"])
+    beta = jax.nn.sigmoid((x @ params["wb"]).astype(jnp.float32))
+    vm = valid.astype(jnp.float32)[..., None]
+    beta = beta * vm                                     # pads: no delta write
+    g = g * vm                                           # and no decay
+
+    cs = cfg.chunk_size
+    xs = (chunkify(q, cs), chunkify(k, cs), chunkify(v, cs),
+          chunkify(g, cs), chunkify(beta, cs))
+    zero = {"S": jnp.zeros((B, H, hd, hd), jnp.float32)}
+
+    def step(s, x_c):
+        y, S = _gdn_chunk_step(s["S"], x_c)
+        return y, {"S": S}
+
+    ys, states = tree_chunk_scan(step, zero, xs, chunk_parent, initial_state)
+    y = unchunkify(ys).reshape(B, S, di).astype(x.dtype)
+    z = x @ params["wz"]
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z))
+    out = y @ params["out_proj"]
+    if capture is not None:
+        caps = {name: {"state": {"S": states["S"][:, c["chunk"] + 1]},
+                       "conv": qkv_pre[:, c["conv_pos"]]}
+                for name, c in capture.items()}
+        return out, caps
+    if return_states:
+        return out, states
+    return out
+
+
+def init_gdn_cache(batch: int, cfg: SSMCfg, d_model: int,
+                   dtype=jnp.float32) -> dict:
+    di = cfg.d_inner(d_model)
+    H = cfg.n_heads(d_model)
+    return {
+        "S": jnp.zeros((batch, H, cfg.head_dim, cfg.head_dim), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, 3 * di), dtype),
+    }
+
+
+def gdn_decode(params: dict, cfg: SSMCfg, x: jax.Array, cache: dict
+               ) -> tuple[jax.Array, dict]:
+    B, _, D = x.shape
+    di = cfg.d_inner(D)
+    H, hd = cfg.n_heads(D), cfg.head_dim
+    qkv = jnp.concatenate(
+        [x @ params["wq"], x @ params["wk"], x @ params["wv"]], axis=-1)
+    window = jnp.concatenate(
+        [cache["conv"], qkv.astype(cache["conv"].dtype)], axis=1)
+    conv = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                      params["conv_w"].astype(jnp.float32))
+    qkv = jax.nn.silu(conv + params["conv_b"])[:, None].astype(x.dtype)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(B, H, hd).astype(jnp.float32)
+    k = k.reshape(B, H, hd).astype(jnp.float32)
+    k = k / jnp.maximum(jnp.linalg.norm(k, axis=-1, keepdims=True), 1e-6)
+    v = v.reshape(B, H, hd).astype(jnp.float32)
+    g = -jnp.exp(params["a_bias"]) * jax.nn.softplus(
+        (x[:, 0] @ params["wa"]).astype(jnp.float32) + params["dt_bias"])
+    beta = jax.nn.sigmoid((x[:, 0] @ params["wb"]).astype(jnp.float32))
+    S = cache["S"] * jnp.exp(g)[..., None, None]
+    err = jnp.einsum("bhd,bhde->bhe", k, S) - v
+    S = S - beta[..., None, None] * jnp.einsum("bhd,bhe->bhde", k, err)
+    o = jnp.einsum("bhd,bhde->bhe", q, S)
+    y = o.reshape(B, 1, di).astype(x.dtype)
+    z = x @ params["wz"]
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z))
+    out = y @ params["out_proj"]
+    return out, {"S": S, "conv": window[:, 1:]}

@@ -1,0 +1,207 @@
+"""Mamba2 (SSD) layer with tree-aware chunked scan (paper §3.2 adapted).
+
+Chunked state-space duality: within-chunk quadratic term + cross-chunk
+recurrent state, with the state routed along the *tree* (parent chunk)
+instead of DFS-sequentially.  The causal conv uses path-predecessor
+gathers (models/layers.tree_causal_conv) — exact per-branch semantics.
+
+State per layer: h [B, H, d_state, head_dim]  (+ conv tail for decode).
+Decays are scalar-per-head-per-token: g_t = dt_t · (−exp(A_log)) ≤ 0.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMCfg
+from repro.models.layers import (_dense_init, init_rmsnorm, rmsnorm,
+                                 tree_causal_conv)
+from repro.models.ssm.common import (chunkify, tree_chunk_scan, unchunkify)
+
+def init_mamba2(key, cfg: SSMCfg, d_model: int, dtype=jnp.float32) -> dict:
+    """Projections are kept UNFUSED (separate z/x/B/C/dt matmuls) — a
+    deliberate sharding decision: a fused [D, 2di+2ds+H] projection has its
+    output dim model-sharded, and the later `split` at non-shard-aligned
+    boundaries makes GSPMD emit per-chunk halo collective-permutes inside
+    the scan (observed: 784 permutes on zamba2 train_4k, §Perf iter 2).
+    Separate matmuls let z/x shard on 'model' while the small B/C/dt stay
+    replicated.  Same math, same FLOPs."""
+    di = cfg.d_inner(d_model)
+    H = cfg.n_heads(d_model)
+    ds, K = cfg.d_state, cfg.conv_kernel
+    ks = jax.random.split(key, 8)
+    return {
+        "in_z": _dense_init(ks[0], (d_model, di), dtype=dtype),
+        "in_x": _dense_init(ks[1], (d_model, di), dtype=dtype),
+        "in_B": _dense_init(ks[2], (d_model, ds), dtype=dtype),
+        "in_C": _dense_init(ks[3], (d_model, ds), dtype=dtype),
+        "in_dt": _dense_init(ks[4], (d_model, H), dtype=dtype),
+        "conv_w": _dense_init(ks[5], (K, di + 2 * ds), scale=0.5,
+                              dtype=dtype),
+        "conv_b": jnp.zeros((di + 2 * ds,), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),      # A = −exp(0) = −1
+        "dt_bias": jnp.full((H,), -1.0, jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm": init_rmsnorm(di, dtype),
+        "out_proj": _dense_init(ks[6], (di, d_model), dtype=dtype),
+    }
+
+
+def _ssd_chunk_step(s_in, xs):
+    """One chunk of SSD.  s_in: h [B,H,ds,hd].
+    xs: (xh [B,L,H,hd], Bm [B,L,ds], Cm [B,L,ds], dt [B,L,H], g [B,L,H])."""
+    xh, Bm, Cm, dt, g = xs
+    L = xh.shape[1]
+    gf = g.astype(jnp.float32)
+    # All exponents below are differences ≤ 0 (cw is non-increasing), so
+    # exp() can only underflow to 0 — which is the correct limit.
+    cw = jnp.cumsum(gf, axis=1)                       # [B,L,H] inclusive
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    # intra: y_i = Σ_{j<=i} (C_i·B_j) exp(cw_i − cw_j) dt_j x_j
+    CB = jnp.einsum("bis,bjs->bij", Cm.astype(jnp.float32),
+                    Bm.astype(jnp.float32))
+    D_ij = jnp.exp(cw[:, :, None] - cw[:, None])      # [B,i,j,H]
+    W = CB[..., None] * D_ij * dt.astype(jnp.float32)[:, None]
+    W = jnp.where(tri[None, :, :, None], W, 0.0)
+    y_intra = jnp.einsum("bijh,bjhd->bihd", W, xh.astype(jnp.float32))
+    # inter: y_i += exp(cw_i) C_i · h_in
+    Ch = jnp.einsum("bis,bhsd->bihd", Cm.astype(jnp.float32),
+                    s_in.astype(jnp.float32))
+    y = y_intra + jnp.exp(cw)[..., None] * Ch
+    # state: h_out = exp(cw_L) h_in + Σ_j exp(cw_L − cw_j) dt_j B_j ⊗ x_j
+    wL = cw[:, -1]                                    # [B,H]
+    dec = jnp.exp(wL[:, None] - cw) * dt.astype(jnp.float32)   # [B,L,H]
+    h_new = jnp.einsum("bjs,bjh,bjhd->bhsd", Bm.astype(jnp.float32), dec,
+                       xh.astype(jnp.float32))
+    h_out = jnp.exp(wL)[..., None, None] * s_in.astype(jnp.float32) + h_new
+    return y.astype(xh.dtype), h_out
+
+
+def mamba2(
+    params: dict,
+    cfg: SSMCfg,
+    x: jax.Array,
+    *,
+    chunk_parent: jax.Array,
+    prev_pows: jax.Array,
+    valid: jax.Array,
+    initial_state: Optional[dict] = None,
+    conv_ctx: Optional[jax.Array] = None,
+    capture: Optional[dict] = None,
+    return_states: bool = False,
+):
+    """x: [B, S, D] (pre-normed); returns [B, S, D] (+ states / captures).
+
+    Partition gateway (paper App. B.7): ``initial_state`` seeds root chunks
+    (chunk_parent = −1); ``conv_ctx`` [B, ≥K−1, conv_dim] supplies the conv
+    inputs of relayed ancestor tokens (prev slots −2…); ``capture`` maps
+    cut-name → dict(chunk=int, conv_pos=idx array) and returns the state at
+    the cut chunk + conv inputs at the path tail, with grad_fn intact.
+    """
+    B, S, D = x.shape
+    di = cfg.d_inner(D)
+    H = cfg.n_heads(D)
+    ds, hd, K = cfg.d_state, cfg.head_dim, cfg.conv_kernel
+
+    z = x @ params["in_z"]
+    xc0 = x @ params["in_x"]
+    Bm0 = x @ params["in_B"]
+    Cm0 = x @ params["in_C"]
+    dt = x @ params["in_dt"]
+    # depthwise causal conv applied per stream (identical math to conv over
+    # the concatenation; avoids any sharded-dim concat/split)
+    cw, cb = params["conv_w"], params["conv_b"]
+    pp = prev_pows[..., :K - 1]
+
+    def cx(s, e):
+        return None if conv_ctx is None else conv_ctx[..., s:e]
+
+    xc = jax.nn.silu(tree_causal_conv(xc0, cw[:, :di], cb[:di], pp,
+                                      cx(0, di)))
+    Bm = jax.nn.silu(tree_causal_conv(Bm0, cw[:, di:di + ds],
+                                      cb[di:di + ds], pp, cx(di, di + ds)))
+    Cm = jax.nn.silu(tree_causal_conv(Cm0, cw[:, di + ds:], cb[di + ds:],
+                                      pp, cx(di + ds, di + 2 * ds)))
+
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["A_log"])
+    vm = valid.astype(jnp.float32)[..., None]
+    dtf = dtf * vm                                    # pads contribute nothing
+    g = dtf * a                                       # and don't decay state
+
+    xh = xc.reshape(B, S, H, hd)
+    ch = chunkify
+    xs = (ch(xh, cfg.chunk_size), ch(Bm, cfg.chunk_size),
+          ch(Cm, cfg.chunk_size), ch(dtf, cfg.chunk_size),
+          ch(g, cfg.chunk_size))
+    zero = {"h": jnp.zeros((B, H, ds, hd), jnp.float32)}
+    init = None if initial_state is None else initial_state
+
+    def step(s, x_c):
+        y, h = _ssd_chunk_step(s["h"], x_c)
+        return y, {"h": h}
+
+    ys, states = tree_chunk_scan(step, zero, xs, chunk_parent, init)
+    y = (unchunkify(ys) + params["D"][:, None] * xh).astype(x.dtype)
+    y = y.reshape(B, S, di)                           # (+ skip connection)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z))
+    out = y @ params["out_proj"]
+    if capture is not None:
+        conv_in = jnp.concatenate([xc0, Bm0, Cm0], axis=-1)  # pre-conv vals
+        caps = {name: {"state": {"h": states["h"][:, c["chunk"] + 1]},
+                       "conv": conv_in[:, c["conv_pos"]]}
+                for name, c in capture.items()}
+        return out, caps
+    if return_states:
+        return out, states
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode: single-token recurrence + conv ring
+# ---------------------------------------------------------------------------
+
+def init_mamba2_cache(batch: int, cfg: SSMCfg, d_model: int,
+                      dtype=jnp.float32) -> dict:
+    di = cfg.d_inner(d_model)
+    H = cfg.n_heads(d_model)
+    conv_dim = di + 2 * cfg.d_state
+    return {
+        "h": jnp.zeros((batch, H, cfg.d_state, cfg.head_dim), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, conv_dim), dtype),
+    }
+
+
+def mamba2_decode(params: dict, cfg: SSMCfg, x: jax.Array, cache: dict
+                  ) -> tuple[jax.Array, dict]:
+    """x: [B, 1, D]."""
+    B, _, D = x.shape
+    di = cfg.d_inner(D)
+    H, ds, hd, K = cfg.n_heads(D), cfg.d_state, cfg.head_dim, cfg.conv_kernel
+    z = x @ params["in_z"]
+    xc = x @ params["in_x"]
+    Bm = x @ params["in_B"]
+    Cm = x @ params["in_C"]
+    dt = x @ params["in_dt"]
+    conv_in = jnp.concatenate([xc, Bm, Cm], axis=-1)  # [B,1,convdim]
+    window = jnp.concatenate([cache["conv"], conv_in.astype(cache["conv"].dtype)],
+                             axis=1)                  # [B,K,convdim]
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                          params["conv_w"].astype(jnp.float32))
+    conv_out = jax.nn.silu(conv_out + params["conv_b"])[:, None]
+    xc, Bm, Cm = jnp.split(conv_out.astype(x.dtype), [di, di + ds], axis=-1)
+
+    dtf = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])
+    g = dtf * (-jnp.exp(params["A_log"]))             # [B,H]
+    xh = xc.reshape(B, H, hd)
+    h = cache["h"] * jnp.exp(g)[..., None, None] + jnp.einsum(
+        "bs,bh,bhd->bhsd", Bm[:, 0].astype(jnp.float32), dtf,
+        xh.astype(jnp.float32))
+    y = jnp.einsum("bs,bhsd->bhd", Cm[:, 0].astype(jnp.float32), h)
+    y = (y + params["D"][:, None] * xh.astype(jnp.float32)).astype(x.dtype)
+    y = y.reshape(B, 1, di)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z))
+    out = y @ params["out_proj"]
+    return out, {"h": h, "conv": window[:, 1:]}

@@ -1,0 +1,228 @@
+"""RWKV6 ("Finch") time-mix / channel-mix with tree-aware chunked scan.
+
+Signature feature: **data-dependent per-channel decay** — w_t is produced
+from the token (via a low-rank MLP), and the recurrent state decays
+per key-channel:
+
+    S_t = diag(w_t) S_{t−1} + k_tᵀ v_t
+    o_t = r_t · (S_{t−1} + diag(u) k_tᵀ v_t)        (u = per-channel bonus)
+
+Tree adaptations (paper §3.2 applied to this family):
+  - chunk-level *tree state routing* for S (parent chunk, not DFS neighbor);
+  - the RWKV "token shift" (every projection mixes x_t with x_{t−1}) is the
+    K=2 analogue of the causal conv — we gather the *path predecessor*
+    (prev_idx) instead of the DFS predecessor, which is exact across
+    branch points.
+
+Within-chunk the per-channel decay forbids the usual rank-factored
+(A = r̃ k̃ᵀ) trick from overflowing-safe computation, so the intra term
+materializes the [L, L, d_k] decay difference — all exponents are ≤ 0
+(differences of a non-increasing cumsum), so only benign underflow can
+occur.  Keep chunk_size modest (32) for this layer.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMCfg
+from repro.models.layers import _dense_init, gather_prev, init_rmsnorm, rmsnorm
+from repro.models.ssm.common import chunkify, tree_chunk_scan, unchunkify
+
+LOGW_MIN = -8.0  # per-token decay clamp (exp(−8) ≈ 3e-4), FLA-style
+
+
+def init_rwkv6_timemix(key, cfg: SSMCfg, d_model: int,
+                       dtype=jnp.float32) -> dict:
+    H = cfg.n_heads(d_model)
+    d_attn = H * cfg.head_dim
+    lora_r = max(32, d_model // 32)
+    ks = jax.random.split(key, 10)
+    return {
+        "mix": 0.5 * jnp.ones((5, d_model), dtype),   # r,k,v,w,g lerp coeffs
+        "wr": _dense_init(ks[0], (d_model, d_attn), dtype=dtype),
+        "wk": _dense_init(ks[1], (d_model, d_attn), dtype=dtype),
+        "wv": _dense_init(ks[2], (d_model, d_attn), dtype=dtype),
+        "wg": _dense_init(ks[3], (d_model, d_attn), dtype=dtype),
+        "wo": _dense_init(ks[4], (d_attn, d_model), dtype=dtype),
+        "w0": jnp.full((d_attn,), -2.0, jnp.float32), # base log-log decay
+        "w_lora_a": _dense_init(ks[5], (d_model, lora_r), dtype=dtype),
+        "w_lora_b": _dense_init(ks[6], (lora_r, d_attn), scale=0.01,
+                                dtype=dtype),
+        "u": _dense_init(ks[7], (H, cfg.head_dim), scale=1.0,
+                         dtype=jnp.float32),
+        "ln_out": init_rmsnorm(d_attn, dtype),
+    }
+
+
+def _wkv_chunk_step(s_in, xs):
+    """s_in: S [B,H,dk,dv]; xs: (r,k,v [B,L,H,hd], logw [B,L,H,hd])."""
+    r, k, v, logw = xs
+    B, L, H, hd = r.shape
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    lw = logw.astype(jnp.float32)
+    cw = jnp.cumsum(lw, axis=1)                       # [B,L,H,hd] inclusive
+    ecw = cw - lw                                     # exclusive
+    # intra: A_ij = Σ_d r_i,d k_j,d exp(ecw_i,d − cw_j,d),  j < i
+    diff = ecw[:, :, None] - cw[:, None]              # [B,i,j,H,hd] ≤ 0 f. j<i
+    strict = jnp.tril(jnp.ones((L, L), bool), k=-1)
+    A = jnp.einsum("bihd,bjhd,bijhd->bhij", rf, kf,
+                   jnp.exp(jnp.where(strict[None, :, :, None, None],
+                                     diff, -jnp.inf)))
+    y = jnp.einsum("bhij,bjhd->bihd", A, vf)
+    # bonus (current token): (r_i ⊙ u ⊙ k_i) · v_i — u baked into k via xs? no:
+    # handled by caller adding bonus term (needs u); here append via closure.
+    # inter: o_i += (r_i ⊙ exp(ecw_i)) · S_in
+    y = y + jnp.einsum("bihd,bhde->bihe", rf * jnp.exp(ecw),
+                       s_in.astype(jnp.float32))
+    # state: S_out = diag(exp(cw_L)) S_in + Σ_j diag(exp(cw_L − cw_j)) k_jᵀ v_j
+    wL = cw[:, -1]                                    # [B,H,hd]
+    S_out = jnp.exp(wL)[..., None] * s_in.astype(jnp.float32) + jnp.einsum(
+        "bjhd,bjhe->bhde", kf * jnp.exp(wL[:, None] - cw), vf)
+    return y, S_out
+
+
+def rwkv6_timemix(
+    params: dict,
+    cfg: SSMCfg,
+    x: jax.Array,
+    *,
+    chunk_parent: jax.Array,
+    prev_idx: jax.Array,
+    valid: jax.Array,
+    initial_state: Optional[dict] = None,
+    shift_ctx: Optional[jax.Array] = None,
+    capture: Optional[dict] = None,
+    return_states: bool = False,
+):
+    B, S, D = x.shape
+    H, hd = cfg.n_heads(D), cfg.head_dim
+    x_prev = gather_prev(x, prev_idx, shift_ctx)      # tree-correct shift
+    mix = params["mix"]
+
+    def lerp(i):
+        return x + (x_prev - x) * mix[i]
+
+    r = (lerp(0) @ params["wr"]).reshape(B, S, H, hd)
+    k = (lerp(1) @ params["wk"]).reshape(B, S, H, hd)
+    v = (lerp(2) @ params["wv"]).reshape(B, S, H, hd)
+    wx = jnp.tanh(lerp(3) @ params["w_lora_a"]) @ params["w_lora_b"]
+    logw = -jnp.exp(params["w0"] + wx.astype(jnp.float32))  # ≤ 0
+    logw = jnp.maximum(logw, LOGW_MIN).reshape(B, S, H, hd)
+    g = jax.nn.silu(lerp(4) @ params["wg"])
+
+    vm = valid[..., None, None].astype(jnp.float32)
+    k = k * vm                                        # pads: no contribution,
+    logw = logw * vm                                  # no decay
+
+    cs = cfg.chunk_size
+    xs = tuple(chunkify(t, cs) for t in (r, k, v, logw))
+    zero = {"S": jnp.zeros((B, H, hd, hd), jnp.float32)}
+
+    def step(s, x_c):
+        y, S = _wkv_chunk_step(s["S"], x_c)
+        return y, {"S": S}
+
+    ys, states = tree_chunk_scan(step, zero, xs, chunk_parent, initial_state)
+    y = unchunkify(ys)
+    # bonus term: (r_i ⊙ u ⊙ k_i) · v_i
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    bonus = jnp.einsum("bihd,bihd,bihe->bihe",
+                       rf, params["u"][None, None] * kf, vf)
+    y = (y + bonus).reshape(B, S, H * hd).astype(x.dtype)
+    y = rmsnorm(params["ln_out"], y) * g
+    out = y @ params["wo"]
+    if capture is not None:
+        caps = {name: {"state": {"S": states["S"][:, c["chunk"] + 1]},
+                       "shift": x[:, c["shift_pos"]]}
+                for name, c in capture.items()}
+        return out, caps
+    if return_states:
+        return out, states
+    return out
+
+
+def init_rwkv6_channelmix(key, d_model: int, d_ff: int,
+                          dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "mix": 0.5 * jnp.ones((2, d_model), dtype),   # k, r
+        "wk": _dense_init(ks[0], (d_model, d_ff), dtype=dtype),
+        "wv": _dense_init(ks[1], (d_ff, d_model), dtype=dtype),
+        "wr": _dense_init(ks[2], (d_model, d_model), dtype=dtype),
+    }
+
+
+def rwkv6_channelmix(params: dict, x: jax.Array, prev_idx: jax.Array,
+                     shift_ctx: Optional[jax.Array] = None,
+                     capture: Optional[dict] = None):
+    x_prev = gather_prev(x, prev_idx, shift_ctx)
+    mix = params["mix"]
+    xk = x + (x_prev - x) * mix[0]
+    xr = x + (x_prev - x) * mix[1]
+    kk = jax.nn.relu(xk @ params["wk"])
+    kk = kk * kk
+    out = jax.nn.sigmoid(xr @ params["wr"]) * (kk @ params["wv"])
+    if capture is not None:
+        caps = {name: {"shift": x[:, c["shift_pos"]]}
+                for name, c in capture.items()}
+        return out, caps
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode: per-token recurrence; cache = {S, x_prev_tm, x_prev_cm}
+# ---------------------------------------------------------------------------
+
+def init_rwkv6_cache(batch: int, cfg: SSMCfg, d_model: int,
+                     dtype=jnp.float32) -> dict:
+    H, hd = cfg.n_heads(d_model), cfg.head_dim
+    return {
+        "S": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "x_tm": jnp.zeros((batch, 1, d_model), dtype),
+        "x_cm": jnp.zeros((batch, 1, d_model), dtype),
+    }
+
+
+def rwkv6_timemix_decode(params: dict, cfg: SSMCfg, x: jax.Array,
+                         cache: dict) -> tuple[jax.Array, dict]:
+    B, _, D = x.shape
+    H, hd = cfg.n_heads(D), cfg.head_dim
+    x_prev = cache["x_tm"]
+    mix = params["mix"]
+
+    def lerp(i):
+        return x + (x_prev - x) * mix[i]
+
+    r = (lerp(0) @ params["wr"]).reshape(B, H, hd)
+    k = (lerp(1) @ params["wk"]).reshape(B, H, hd)
+    v = (lerp(2) @ params["wv"]).reshape(B, H, hd)
+    wx = jnp.tanh(lerp(3) @ params["w_lora_a"]) @ params["w_lora_b"]
+    logw = jnp.maximum(-jnp.exp(params["w0"] + wx.astype(jnp.float32)),
+                       LOGW_MIN).reshape(B, H, hd)
+    g = jax.nn.silu(lerp(4) @ params["wg"])
+
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    S = cache["S"]
+    kv = jnp.einsum("bhd,bhe->bhde", kf, vf)
+    o = jnp.einsum("bhd,bhde->bhe", rf,
+                   S + params["u"][None, ..., None] * kv)
+    S = jnp.exp(logw)[..., None] * S + kv
+    y = o.reshape(B, 1, H * hd).astype(x.dtype)
+    y = rmsnorm(params["ln_out"], y) * g
+    out = y @ params["wo"]
+    return out, {**cache, "S": S, "x_tm": x}
+
+
+def rwkv6_channelmix_decode(params: dict, x: jax.Array, cache: dict
+                            ) -> tuple[jax.Array, dict]:
+    x_prev = cache["x_cm"]
+    mix = params["mix"]
+    xk = x + (x_prev - x) * mix[0]
+    xr = x + (x_prev - x) * mix[1]
+    kk = jax.nn.relu(xk @ params["wk"])
+    kk = kk * kk
+    y = jax.nn.sigmoid(xr @ params["wr"]) * (kk @ params["wv"])
+    return y, {**cache, "x_cm": x}

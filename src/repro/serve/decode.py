@@ -1,0 +1,221 @@
+"""Serving: prefill + single-token decode with per-layer caches.
+
+``decode_32k`` / ``long_500k`` dry-run shapes lower ``decode_step`` — one
+new token against a KV/SSM cache.  Caches are layer-stacked pytrees so the
+decode layer loop is a lax.scan (same compile-size discipline as training).
+
+Cache kinds:
+  attention   : ring-buffer K/V of ``buf_len`` slots (full history for
+                decode_32k; sliding window for long_500k dense variants)
+  mamba2/gdn  : recurrent state + causal-conv tail (O(1) in context)
+  rwkv6       : wkv state + token-shift tails (O(1))
+  hybrid      : mamba2 stack + per-application shared-attn caches
+  audio       : decoder self-cache + cross K/V from the (stub) encoder
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import decode_attention, project_cross_kv
+from repro.models.layers import logits_from_hidden, mlp, rmsnorm
+from repro.models.moe import moe
+from repro.models.ssm.gdn import gdn_decode, init_gdn_cache
+from repro.models.ssm.mamba2 import init_mamba2_cache, mamba2_decode
+from repro.models.ssm.rwkv6 import (init_rwkv6_cache,
+                                    rwkv6_channelmix_decode,
+                                    rwkv6_timemix_decode)
+from repro.models.transformer import _dtype, _layer_kinds, layer_groups
+from repro.sharding import shard_logits
+
+
+# ---------------------------------------------------------------------------
+# Cache init
+# ---------------------------------------------------------------------------
+
+def _attn_cache(L: int, B: int, T: int, cfg: ModelConfig, dt) -> dict:
+    a = cfg.attn
+    return {
+        "k": jnp.zeros((L, B, T, a.n_kv_heads, a.head_dim), dt),
+        "v": jnp.zeros((L, B, T, a.n_kv_heads, a.head_dim), dt),
+        "pos": jnp.full((L, B, T), -1, jnp.int32),
+    }
+
+
+def _ssm_cache(L: int, B: int, cfg: ModelConfig, dt) -> dict:
+    s = cfg.ssm
+    if s.kind == "rwkv6":
+        base = init_rwkv6_cache(B, s, cfg.d_model, dt)
+    elif s.kind == "gdn":
+        base = init_gdn_cache(B, s, cfg.d_model, dt)
+    else:
+        base = init_mamba2_cache(B, s, cfg.d_model, dt)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (L,) + a.shape).copy(), base)
+
+
+def init_cache(cfg: ModelConfig, batch: int, buf_len: int,
+               enc_len: int = 0) -> dict:
+    """buf_len: KV slots (= max context, or window size for sliding)."""
+    dt = _dtype(cfg)
+    a = cfg.attn
+    if a is not None and a.window is not None:
+        buf_len = min(buf_len, a.window)
+    cache: dict[str, Any] = {}
+    groups = layer_groups(cfg)
+    for gi, (kind, n) in enumerate(groups):
+        if kind in ("dense", "moe"):
+            cache[f"g{gi}"] = _attn_cache(n, batch, buf_len, cfg, dt)
+        elif kind in ("mamba2", "rwkv6", "gdn"):
+            cache[f"g{gi}"] = _ssm_cache(n, batch, cfg, dt)
+        elif kind == "decoder_cross":
+            cache[f"g{gi}"] = _attn_cache(n, batch, buf_len, cfg, dt)
+    if cfg.family == "hybrid":
+        n_apps = -(-cfg.n_layers // cfg.hybrid.attn_every)
+        cache["shared"] = _attn_cache(n_apps, batch, buf_len, cfg, dt)
+    if cfg.family == "audio":
+        e = cfg.encdec
+        cache["cross"] = {
+            "k": jnp.zeros((e.dec_layers, batch, enc_len,
+                            a.n_kv_heads, a.head_dim), dt),
+            "v": jnp.zeros((e.dec_layers, batch, enc_len,
+                            a.n_kv_heads, a.head_dim), dt),
+            "valid": jnp.ones((batch, enc_len), bool),
+        }
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Per-layer decode
+# ---------------------------------------------------------------------------
+
+def _decode_layer(cfg: ModelConfig, p: dict, kind: str, x, cache_l, pos,
+                  widx, cross_l=None):
+    eps = cfg.norm_eps
+    if kind in ("dense", "moe"):
+        a, kv = decode_attention(p["attn"], cfg.attn,
+                                 rmsnorm(p["ln1"], x, eps), cache_l, pos,
+                                 widx)
+        x = x + a
+        h = rmsnorm(p["ln2"], x, eps)
+        if kind == "moe":
+            m, _ = moe(p["moe"], cfg.moe, h,
+                       jnp.ones(h.shape[:2], bool), cfg.mlp_activation)
+        else:
+            m = mlp(p["mlp"], h, cfg.mlp_activation)
+        return x + m, kv
+    if kind == "decoder_cross":
+        a, kv = decode_attention(p["attn"], cfg.attn,
+                                 rmsnorm(p["ln1"], x, eps), cache_l, pos,
+                                 widx, cross_cache=None)
+        x = x + a
+        kvx = project_cross_kv(p["xattn"], cfg.attn, cross_l["enc_out"]) \
+            if "enc_out" in (cross_l or {}) else (cross_l["k"], cross_l["v"])
+        from repro.models.attention import _attend_ref, _scale, NEG_INF
+        B = x.shape[0]
+        qc = (rmsnorm(p["ln_x"], x, eps) @ p["xattn"]["wq"]).reshape(
+            B, 1, cfg.attn.n_heads, cfg.attn.head_dim)
+        cb = jnp.where(cross_l["valid"][:, None, :], 0.0,
+                       NEG_INF)[:, None, None]
+        oc = _attend_ref(qc, kvx[0], kvx[1], cb, _scale(cfg.attn))
+        x = x + oc.reshape(B, 1, -1) @ p["xattn"]["wo"]
+        m = mlp(p["mlp"], rmsnorm(p["ln2"], x, eps), cfg.mlp_activation)
+        return x + m, kv
+    if kind == "rwkv6":
+        t, cache_l = rwkv6_timemix_decode(p["tm"], cfg.ssm,
+                                          rmsnorm(p["ln1"], x, eps), cache_l)
+        x = x + t
+        c, cache_l = rwkv6_channelmix_decode(p["cm"],
+                                             rmsnorm(p["ln2"], x, eps),
+                                             cache_l)
+        return x + c, cache_l
+    if kind == "mamba2":
+        s, cache_l = mamba2_decode(p["ssm"], cfg.ssm,
+                                   rmsnorm(p["ln1"], x, eps), cache_l)
+        return x + s, cache_l
+    if kind == "gdn":
+        s, cache_l = gdn_decode(p["ssm"], cfg.ssm,
+                                rmsnorm(p["ln1"], x, eps), cache_l)
+        x = x + s
+        m = mlp(p["mlp"], rmsnorm(p["ln2"], x, eps), cfg.mlp_activation)
+        return x + m, cache_l
+    raise ValueError(kind)
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict,
+                tokens: jax.Array, pos: jax.Array, write_idx: jax.Array
+                ) -> tuple[jax.Array, dict]:
+    """tokens: [B, 1]; pos: [B] absolute positions; write_idx: scalar ring
+    slot.  Returns (logits [B, vocab], new_cache)."""
+    from repro.models.layers import embed
+    x = embed(params["embed"], tokens)
+    new_cache: dict = {}
+    groups = layer_groups(cfg)
+    if cfg.family == "hybrid":
+        stacked = params["layer_stacks"][0]
+        L, step = cfg.n_layers, cfg.hybrid.attn_every
+        emb0 = x
+        g0 = cache["g0"]
+        sh_new = []
+        new_g0_parts = []
+        i = si = 0
+        while i < L:
+            j = min(i + step, L)
+            stage = jax.tree.map(lambda a: a[i:j], stacked)
+            cstage = jax.tree.map(lambda a: a[i:j], g0)
+
+            def body(xc, inp):
+                lp, cl = inp
+                xn, cn = _decode_layer(cfg, lp, "mamba2", xc, cl, pos, widx=0)
+                return xn, cn
+
+            x, cnew = jax.lax.scan(body, x, (stage, cstage))
+            new_g0_parts.append(cnew)
+            if cfg.hybrid.concat_embed:
+                h_in = jnp.concatenate([x, emb0], axis=-1) \
+                    @ params["shared_in"]
+            else:
+                h_in = x
+            csh = jax.tree.map(lambda a: a[si], cache["shared"])
+            h_out, kv = _decode_layer(cfg, params["shared_attn"], "dense",
+                                      h_in, csh, pos, write_idx)
+            sh_new.append(kv)
+            x = x + (h_out - h_in)
+            i = j
+            si += 1
+        new_cache["g0"] = jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *new_g0_parts)
+        new_cache["shared"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs, axis=0), *sh_new)
+    else:
+        for gi, ((kind, n), stacked) in enumerate(
+                zip(groups, params["layer_stacks"])):
+            cross_l = cache.get("cross") if kind == "decoder_cross" else None
+
+            def body(xc, inp):
+                if cross_l is not None:
+                    lp, cl, cx = inp
+                else:
+                    lp, cl = inp
+                    cx = None
+                xn, cn = _decode_layer(cfg, lp, kind, xc, cl, pos,
+                                       write_idx, cx)
+                return xn, cn
+
+            xs = (stacked, cache[f"g{gi}"])
+            if cross_l is not None:
+                xs = xs + ({"k": cross_l["k"], "v": cross_l["v"],
+                            "valid": jnp.broadcast_to(
+                                cross_l["valid"][None],
+                                (n,) + cross_l["valid"].shape)},)
+            x, cnew = jax.lax.scan(body, x, xs)
+            new_cache[f"g{gi}"] = cnew
+        if "cross" in cache:
+            new_cache["cross"] = cache["cross"]
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = logits_from_hidden(params["embed"], params.get("lm_head"), x)
+    return shard_logits(logits)[:, 0], new_cache

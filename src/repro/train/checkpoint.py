@@ -1,0 +1,59 @@
+"""Checkpointing: flat npz + JSON manifest (offline-friendly, no orbax).
+
+Single-host implementation; on a real multi-host pod each process would
+write its addressable shards (the manifest format already records the
+flattened key paths needed to reassemble).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_checkpoint(path: str, params: Any, opt_state: Any = None,
+                    meta: dict | None = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    np.savez(os.path.join(path, "params.npz"), **_flatten(params))
+    if opt_state is not None:
+        np.savez(os.path.join(path, "opt_state.npz"), **_flatten(opt_state))
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump({"meta": meta or {},
+                   "keys": sorted(_flatten(params))}, f, indent=1)
+
+
+def load_checkpoint(path: str, params_like: Any,
+                    opt_state_like: Any = None):
+    """Restore into the structure of ``params_like`` (shape/dtype checked)."""
+    def restore(npz_path, like):
+        data = np.load(npz_path)
+        flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for path, leaf in flat:
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                           for p in path)
+            arr = data[key]
+            assert arr.shape == tuple(leaf.shape), (key, arr.shape,
+                                                    leaf.shape)
+            leaves.append(jnp.asarray(arr, leaf.dtype))
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    params = restore(os.path.join(path, "params.npz"), params_like)
+    if opt_state_like is None:
+        return params
+    opt = restore(os.path.join(path, "opt_state.npz"), opt_state_like)
+    return params, opt

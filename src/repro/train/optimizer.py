@@ -1,0 +1,85 @@
+"""AdamW + cosine schedule + global-norm clipping (no external deps).
+
+Optimizer state mirrors the parameter pytree, so it inherits parameter
+sharding under pjit automatically (each moment tensor gets its parameter's
+PartitionSpec via sharding.param_shardings on the state's leaves).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    betas: tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    grad_clip: float = 1.0
+
+
+def init_opt_state(params: Any) -> dict:
+    zeros = lambda p: jax.tree.map(
+        lambda a: jnp.zeros(a.shape, jnp.float32), p)
+    return {"mu": zeros(params), "nu": zeros(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def lr_at(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    warm = cfg.lr * (step + 1) / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.lr * cos)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(a.astype(jnp.float32)))
+                        for a in jax.tree.leaves(tree)))
+
+
+def _decay_mask(params: Any) -> Any:
+    """No weight decay on 1-D tensors (norm scales, biases)."""
+    flat, treedef = jax.tree_util.tree_flatten(params)
+    return jax.tree_util.tree_unflatten(
+        treedef, [a.ndim > 1 for a in flat])
+
+
+def adamw_update(cfg: OptimizerConfig, params: Any, grads: Any,
+                 state: dict) -> tuple[Any, dict, dict]:
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"]
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-9))
+    b1, b2 = cfg.betas
+    lr = lr_at(cfg, step)
+    mask = _decay_mask(params)
+
+    def upd(p, g, mu, nu, decay):
+        g = g.astype(jnp.float32) * scale
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * g * g
+        mu_hat = mu / (1 - b1 ** (step + 1))
+        nu_hat = nu / (1 - b2 ** (step + 1))
+        delta = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps)
+        if decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
+
+    out = jax.tree.map(upd, params, grads, state["mu"], state["nu"], mask)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_state = {"mu": new_mu, "nu": new_nu, "step": step + 1}
+    return new_params, new_state, {"grad_norm": gn, "lr": lr}

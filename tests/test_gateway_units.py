@@ -1,0 +1,77 @@
+"""Unit tests for the gateway plumbing: the _concat_tail/_route_tail
+adjoint pair, and gather_prev's gateway-context slots."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gateway import _concat_tail, _route_tail
+from repro.models.layers import gather_prev, prev_powers, tree_causal_conv
+
+
+def test_concat_tail_route_tail_are_adjoint():
+    """⟨concat_tail(a,b), c⟩ == ⟨(a,b), route_tail(c)⟩ for random tensors —
+    the defining property of a correct transpose."""
+    rng = np.random.default_rng(0)
+    for T_in, T_c, keep in [(0, 5, 3), (2, 5, 3), (4, 1, 3), (3, 3, 10)]:
+        shape = lambda t: (2, 1, t, 4)
+        a = None if T_in == 0 else jnp.asarray(
+            rng.normal(size=shape(T_in)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=shape(T_c)), jnp.float32)
+        out = _concat_tail(a, b, keep)
+        c = jnp.asarray(rng.normal(size=out.shape), jnp.float32)
+        lhs = float(jnp.vdot(out, c))
+        ca, cb = _route_tail(None if a is None else a.shape, b.shape, keep,
+                             c)
+        rhs = float(jnp.vdot(b, cb))
+        if a is not None:
+            rhs += float(jnp.vdot(a, ca))
+        np.testing.assert_allclose(lhs, rhs, rtol=1e-6)
+
+
+def test_gather_prev_gateway_slots():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(1, 4, 3)), jnp.float32)
+    ctx = jnp.asarray(rng.normal(size=(1, 2, 3)), jnp.float32)
+    # prev: token0 → gateway slot −2 (= ctx[:, -1]); token1 → 0; token2 →
+    # slot −3 (= ctx[:, -2]); token3 → −1 (none)
+    prev = jnp.asarray([[-2, 0, -3, -1]], jnp.int32)
+    g = gather_prev(x, prev, ctx)
+    np.testing.assert_allclose(np.asarray(g[0, 0]), np.asarray(ctx[0, 1]))
+    np.testing.assert_allclose(np.asarray(g[0, 1]), np.asarray(x[0, 0]))
+    np.testing.assert_allclose(np.asarray(g[0, 2]), np.asarray(ctx[0, 0]))
+    np.testing.assert_allclose(np.asarray(g[0, 3]), 0.0)
+    # slot beyond ctx → zeros
+    prev2 = jnp.asarray([[-5, -1, -1, -1]], jnp.int32)
+    g2 = gather_prev(x, prev2, ctx)
+    np.testing.assert_allclose(np.asarray(g2[0, 0]), 0.0)
+
+
+def test_prev_powers_chains_gateway_slots():
+    prev = np.asarray([[-2, 0, 1, 2]], np.int32)
+    pp = prev_powers(prev, 3)
+    # token0: prev=−2, prev²=−3, prev³=−4
+    np.testing.assert_array_equal(pp[0, 0], [-2, -3, -4])
+    # token3: 2, 1, 0
+    np.testing.assert_array_equal(pp[0, 3], [2, 1, 0])
+    # token1: 0, then −2 (through token0's gateway), then −3
+    np.testing.assert_array_equal(pp[0, 1], [0, -2, -3])
+
+
+def test_tree_conv_with_ctx_matches_manual():
+    """Causal conv across a partition boundary == conv on the glued
+    sequence."""
+    rng = np.random.default_rng(2)
+    K, D = 3, 4
+    full = jnp.asarray(rng.normal(size=(1, 6, D)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(K, D)), jnp.float32)
+    prev_full = np.asarray([[-1, 0, 1, 2, 3, 4]], np.int32)
+    ref = tree_causal_conv(full, w, None, jnp.asarray(
+        prev_powers(prev_full, K - 1)))
+    # split at 4: child sees tokens 4..5 with ctx = tokens 2..3
+    child = full[:, 4:]
+    ctx = full[:, 2:4]
+    prev_child = np.asarray([[-2, 0]], np.int32)
+    got = tree_causal_conv(child, w, None, jnp.asarray(
+        prev_powers(prev_child, K - 1)), ctx)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref[:, 4:]),
+                               rtol=1e-6)

@@ -1,0 +1,117 @@
+"""Property-based tests (hypothesis) on the tree-serialization invariants.
+
+These are the system's load-bearing invariants: every model-layer
+adaptation (mask, positions, state routing, λ weights) is derived from the
+serialization arrays, so if these hold for arbitrary trees, the layer
+equivalences reduce to the (separately tested) layer math.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.packing import pack_linear_paths, pack_trees
+from repro.core.tree import (TrajectoryTree, TreeNode, serialize_tree,
+                             visibility_mask)
+from repro.models.layers import prev_powers
+
+
+@st.composite
+def trees(draw, max_depth=4, max_children=3, max_seg=6):
+    def node(depth):
+        L = draw(st.integers(1, max_seg))
+        toks = draw(st.lists(st.integers(0, 255), min_size=L, max_size=L))
+        n = TreeNode(tokens=np.asarray(toks, np.int32))
+        if depth < max_depth:
+            k = draw(st.integers(0, max_children))
+            if k >= 2 or (k == 1 and draw(st.booleans())):
+                n.children = [node(depth + 1) for _ in range(k)]
+        return n
+
+    return TrajectoryTree(root=node(0))
+
+
+@given(trees())
+@settings(max_examples=40, deadline=None)
+def test_serialization_counts_and_weights(tree):
+    ser = serialize_tree(tree)
+    # every token exactly once
+    assert ser.n == tree.num_unique_tokens()
+    assert ser.valid.all()
+    # λ sums: Σ_t λ_t  ==  Σ_paths (len(path)·1/K) == flat/K for all-trained
+    K = tree.num_leaves()
+    assert ser.num_paths == K
+    flat = tree.flat_tokens()
+    np.testing.assert_allclose(ser.weight.sum(), flat / K, rtol=1e-5)
+    # POR consistency (Eq. 12)
+    por = tree.por()
+    assert 0 <= por < 1
+    np.testing.assert_allclose(por, 1 - ser.n / flat, rtol=1e-9)
+
+
+@given(trees())
+@settings(max_examples=30, deadline=None)
+def test_mask_is_tree_partial_order(tree):
+    ser = serialize_tree(tree)
+    m = visibility_mask(ser)
+    n = ser.n
+    # diagonal visible, causal
+    assert np.diag(m).all()
+    assert not np.triu(m, 1).any()
+    # transitivity: visible(i,j) ∧ visible(j,k) ⇒ visible(i,k)
+    # (m is a partial order restricted to ancestor chains)
+    m_int = m.astype(np.int32)
+    two_step = (m_int @ m_int) > 0
+    assert not (two_step & ~m).any()
+    # each token's visible set is exactly its path prefix: count equals
+    # depth position + 1
+    np.testing.assert_array_equal(m.sum(1), ser.pos_ids + 1)
+
+
+@given(trees())
+@settings(max_examples=30, deadline=None)
+def test_prev_chain_matches_positions(tree):
+    ser = serialize_tree(tree)
+    # following prev_idx from any token walks positions down by exactly 1
+    prev = ser.prev_idx
+    pos = ser.pos_ids
+    has_prev = prev >= 0
+    np.testing.assert_array_equal(pos[has_prev] - 1, pos[prev[has_prev]])
+    # prev^k power chains agree with k applications
+    pp = prev_powers(prev[None], 3)[0]
+    for t in range(ser.n):
+        cur = t
+        for j in range(3):
+            cur = prev[cur] if cur >= 0 else -1
+            assert pp[t, j] == cur
+
+
+@given(trees(), st.integers(2, 8))
+@settings(max_examples=25, deadline=None)
+def test_chunk_alignment_and_parent_map(tree, chunk):
+    ser = serialize_tree(tree, chunk_size=chunk)
+    assert ser.n % chunk == 0
+    cp = ser.chunk_parent_map(chunk)
+    C = ser.n // chunk
+    assert cp.shape == (C,)
+    # parents always precede children (DFS pre-order property the SSM
+    # routing depends on)
+    for c in range(C):
+        assert cp[c] < c
+    # padding is inert
+    assert (ser.kv_last[~ser.valid] == -1).all()
+    assert (ser.weight[~ser.valid] == 0).all()
+
+
+@given(trees())
+@settings(max_examples=20, deadline=None)
+def test_pack_weight_conservation(tree):
+    """Packing preserves Σλ (Eq. 2/3: tree and path serializations carry
+    identical total loss weight)."""
+    ser = serialize_tree(tree)
+    S = max(64, ((ser.n + 63) // 64) * 64)
+    tb = pack_trees([ser], S)
+    lb = pack_linear_paths([tree.linearize_paths()],
+                           max(S, ((tree.max_path_tokens() + 63) // 64)
+                               * 64))
+    w_tree = tb.weight[tb.prev_idx >= 0].sum()
+    w_lin = lb.weight[lb.prev_idx >= 0].sum()
+    np.testing.assert_allclose(w_tree, w_lin, rtol=1e-5)

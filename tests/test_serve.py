@@ -1,0 +1,121 @@
+"""Serving path: decode-with-cache equals the training forward, for every
+family; sliding-window cache; audio enc-dec decode with cross-attention."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_cfg
+from repro.core.packing import pack_trees
+from repro.core.tree import TrajectoryTree, TreeNode, serialize_tree
+from repro.models.attention import project_cross_kv
+from repro.models.layers import logits_from_hidden
+from repro.models.model import (init_params, needs_chunks, prepare_batch)
+from repro.models.transformer import forward
+from repro.serve.decode import decode_step, init_cache
+
+FAMILIES = ["dense", "moe", "ssm_rwkv6", "ssm_mamba2", "ssm_gdn", "hybrid"]
+
+
+def _chain_batch(cfg, toks, chunk):
+    tree = TrajectoryTree(TreeNode(tokens=toks))
+    ser = serialize_tree(tree, chunk_size=chunk)
+    return prepare_batch(cfg, pack_trees([ser], ser.n, chunk_size=chunk))
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_decode_matches_forward(family):
+    cfg = tiny_cfg(family)
+    chunk = cfg.ssm.chunk_size if needs_chunks(cfg) else None
+    params = init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    S = 16
+    toks = rng.integers(0, 89, S).astype(np.int32)
+    b = _chain_batch(cfg, toks, chunk)
+    h, _ = forward(cfg, params, b)
+    ref = logits_from_hidden(params["embed"], params.get("lm_head"), h)[0]
+    cache = init_cache(cfg, 1, S)
+    outs = []
+    for t in range(S):
+        lg, cache = decode_step(cfg, params, cache,
+                                jnp.asarray(toks[None, t:t + 1]),
+                                jnp.asarray([t], jnp.int32),
+                                jnp.asarray(t, jnp.int32))
+        outs.append(lg[0])
+    dec = jnp.stack(outs)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(ref),
+                               atol=5e-4, rtol=5e-4)
+
+
+def test_sliding_window_decode_masks_old_tokens():
+    import dataclasses
+    cfg = tiny_cfg("dense")
+    cfg = cfg.replace(attn=dataclasses.replace(cfg.attn, window=4))
+    params = init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(1)
+    S = 12
+    toks = rng.integers(0, 89, S).astype(np.int32)
+    # full cache vs ring cache of window size must agree (window masking)
+    caches = [init_cache(cfg, 1, S), init_cache(cfg, 1, 4)]
+    outs = [[], []]
+    for t in range(S):
+        for ci, cache in enumerate(caches):
+            T = cache["g0"]["k"].shape[2]
+            lg, caches[ci] = decode_step(
+                cfg, params, cache, jnp.asarray(toks[None, t:t + 1]),
+                jnp.asarray([t], jnp.int32), jnp.asarray(t % T, jnp.int32))
+            outs[ci].append(lg[0])
+    np.testing.assert_allclose(np.asarray(jnp.stack(outs[0])),
+                               np.asarray(jnp.stack(outs[1])),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_audio_encdec_decode():
+    cfg = tiny_cfg("audio")
+    params = init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(2)
+    B, S, F = 1, 10, cfg.frontend_len
+    toks = rng.integers(0, 89, S).astype(np.int32)
+    frames = rng.normal(size=(B, F, cfg.d_model)).astype(np.float32)
+
+    # reference: full forward
+    tree = TrajectoryTree(TreeNode(tokens=toks))
+    ser = serialize_tree(tree)
+    b = prepare_batch(cfg, pack_trees([ser], ser.n), frames)
+    h, _ = forward(cfg, params, b)
+    ref = logits_from_hidden(params["embed"], params.get("lm_head"), h)[0]
+
+    # decode: encoder out → cross cache, then token-by-token
+    from repro.models.transformer import _scan_group, layer_groups
+    from repro.models.layers import rmsnorm
+    enc_meta = dict(
+        pos_ids=jnp.broadcast_to(jnp.arange(F, dtype=jnp.int32), (B, F)),
+        kv_last=jnp.full((B, F), F - 1, jnp.int32),
+        prev_idx=jnp.full((B, F), -1, jnp.int32),
+        valid=jnp.ones((B, F), bool))
+    enc_x, _ = _scan_group(cfg, params["encoder"], "encoder",
+                           jnp.asarray(frames), enc_meta, "ref")
+    enc_out = rmsnorm(params["enc_norm"], enc_x, cfg.norm_eps)
+
+    cache = init_cache(cfg, B, S, enc_len=F)
+    # fill cross K/V per decoder layer
+    dec_stack = params["layer_stacks"][0]
+    n_dec = cfg.encdec.dec_layers
+    ks, vs = [], []
+    for l in range(n_dec):
+        lp = jax.tree.map(lambda a: a[l], dec_stack)
+        k, v = project_cross_kv(lp["xattn"], cfg.attn, enc_out)
+        ks.append(k)
+        vs.append(v)
+    cache["cross"]["k"] = jnp.stack(ks).astype(cache["cross"]["k"].dtype)
+    cache["cross"]["v"] = jnp.stack(vs).astype(cache["cross"]["v"].dtype)
+
+    outs = []
+    for t in range(S):
+        lg, cache = decode_step(cfg, params, cache,
+                                jnp.asarray(toks[None, t:t + 1]),
+                                jnp.asarray([t], jnp.int32),
+                                jnp.asarray(t, jnp.int32))
+        outs.append(lg[0])
+    np.testing.assert_allclose(np.asarray(jnp.stack(outs)),
+                               np.asarray(ref), atol=5e-4, rtol=5e-4)

@@ -1,0 +1,103 @@
+"""Training substrate: optimizer math, schedule, checkpoint round-trip,
+and end-to-end loss descent in both tree and baseline modes."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from conftest import tiny_cfg
+from repro.data.loader import LoaderConfig, batches
+from repro.models.model import init_params
+from repro.train.checkpoint import load_checkpoint, save_checkpoint
+from repro.train.optimizer import (OptimizerConfig, adamw_update,
+                                   global_norm, init_opt_state, lr_at)
+from repro.train.train_step import make_train_step
+
+
+def test_lr_schedule():
+    cfg = OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=110,
+                          min_lr_ratio=0.1)
+    assert float(lr_at(cfg, 0)) < 0.2
+    np.testing.assert_allclose(float(lr_at(cfg, 9)), 1.0, rtol=1e-6)
+    assert abs(float(lr_at(cfg, 60)) - 0.55) < 0.02   # mid-cosine
+    np.testing.assert_allclose(float(lr_at(cfg, 109)), 0.1, atol=2e-3)
+
+
+def test_adamw_against_reference():
+    """One AdamW step vs a hand-rolled numpy reference."""
+    rng = np.random.default_rng(0)
+    p = {"w": jnp.asarray(rng.normal(size=(4, 3)), jnp.float32),
+         "b": jnp.asarray(rng.normal(size=(3,)), jnp.float32)}
+    g = {"w": jnp.asarray(rng.normal(size=(4, 3)), jnp.float32),
+         "b": jnp.asarray(rng.normal(size=(3,)), jnp.float32)}
+    cfg = OptimizerConfig(lr=1e-2, warmup_steps=1, total_steps=100,
+                          grad_clip=1e9, weight_decay=0.1)
+    st = init_opt_state(p)
+    p2, st2, m = adamw_update(cfg, p, g, st)
+    lr = float(lr_at(cfg, 0))
+    for k, decay in (("w", True), ("b", False)):
+        gk = np.asarray(g[k])
+        mu = 0.1 * gk
+        nu = 0.05 * gk * gk
+        mu_hat = mu / (1 - 0.9)
+        nu_hat = nu / (1 - 0.95)
+        delta = mu_hat / (np.sqrt(nu_hat) + cfg.eps)
+        if decay:
+            delta = delta + cfg.weight_decay * np.asarray(p[k])
+        ref = np.asarray(p[k]) - lr * delta
+        np.testing.assert_allclose(np.asarray(p2[k]), ref, rtol=1e-5)
+    assert int(st2["step"]) == 1
+
+
+def test_grad_clipping():
+    p = {"w": jnp.ones((2, 2))}
+    g = {"w": jnp.full((2, 2), 100.0)}
+    cfg = OptimizerConfig(grad_clip=1.0, warmup_steps=1)
+    _, _, m = adamw_update(cfg, p, g, init_opt_state(p))
+    assert float(m["grad_norm"]) == 200.0
+    assert float(global_norm(g)) == 200.0
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = tiny_cfg("dense")
+    params = init_params(cfg, jax.random.key(0))
+    opt = init_opt_state(params)
+    save_checkpoint(str(tmp_path / "ck"), params, opt, meta={"x": 1})
+    p2, o2 = load_checkpoint(str(tmp_path / "ck"), params, opt)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(o2["step"]) == 0
+    assert os.path.exists(tmp_path / "ck" / "manifest.json")
+
+
+def _run_mode(mode: str, steps: int = 12):
+    cfg = tiny_cfg("dense")
+    lc = LoaderConfig(seq_len=256, batch_rows=2, trees_per_batch=4,
+                      mode=mode, kind="random", seed=3,
+                      gen_kwargs=dict(seg_len_range=(2, 6), max_depth=3))
+    params = init_params(cfg, jax.random.key(0))
+    opt_cfg = OptimizerConfig(lr=3e-3, warmup_steps=2, total_steps=steps)
+    step = make_train_step(cfg, opt_cfg, donate=False)
+    opt = jax.jit(lambda p: p)(init_opt_state(params))  # noop: keep fresh
+    from repro.train.optimizer import init_opt_state as ios
+    opt = ios(params)
+    losses = []
+    for inputs, _ in batches(cfg, lc, steps):
+        params, opt, m = step(params, opt, inputs)
+        losses.append(float(m["token_nll_mean"]))
+    return losses
+
+
+def test_loss_decreases_tree_mode():
+    losses = _run_mode("tree")
+    assert losses[-1] < losses[0]
+    assert np.isfinite(losses).all()
+
+
+def test_tree_and_baseline_dynamics_match():
+    """Paper Fig. 7 bottom: per-step losses coincide between tree and
+    baseline training (same data, same seeds)."""
+    lt = _run_mode("tree", steps=6)
+    lb = _run_mode("baseline", steps=6)
+    np.testing.assert_allclose(lt, lb, rtol=2e-4)
