@@ -9,7 +9,7 @@ import numpy as np
 from repro.configs.base import AttnCfg, ModelConfig
 from repro.core.packing import pack_linear_paths, pack_trees
 from repro.core.tree import serialize_tree
-from repro.models.model import init_params, loss_and_metrics, prepare_batch
+from repro.models.model import loss_and_metrics, prepare_batch
 
 
 def bench_model(n_layers=4, d_model=128, vocab=1024) -> ModelConfig:

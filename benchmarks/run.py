@@ -1,6 +1,7 @@
 """Benchmark harness — one entry per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows:
+Prints ``name,us_per_call,derived`` CSV rows and (with ``--out``) writes
+the same rows as a JSON artifact for CI:
 
   por_sweep_*        Fig. 8a — tree vs baseline step time across POR
   partition_tokens   Fig. 5  — token counts: flatten / standard / ours
@@ -8,12 +9,29 @@ Prints ``name,us_per_call,derived`` CSV rows:
   realistic_*        Fig. 7  — agentic-tree speedup + loss deviation
   memory_overhead    §4.6    — extra tree-metadata bytes vs activations
   kernel_blocks      App. A.1 — tree-attention kernel block-skip ratio
+  kernel_fwd / kernel_fwd_bwd
+                     App. A.1 — fused Pallas kernel wall time, forward and
+                     forward+backward (jax.grad through the op), tree
+                     packing vs linearized packing of the same trees
+
+Flags:
+  --smoke      tiny qwen1.5-0.5B-scale config, CPU-interpret friendly,
+               finishes in well under 2 min — the CI benchmark gate
+  --impl X     attention impl for the model-level benches (ref/chunked/
+               pallas); model benches default to ref, kernel benches
+               always exercise the Pallas op
+  --out F      write rows + environment metadata as JSON
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import sys
+import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 sys.path.insert(0, "src")  # allow `python -m benchmarks.run` from repo root
@@ -30,20 +48,20 @@ from repro.data.synthetic import (agentic_tree,  # noqa: E402
                                   por_controlled_tree, trees_for_batch)
 from repro.models.model import init_params  # noqa: E402
 
-ROWS: list[str] = []
+ROWS: list[dict] = []
 
 
 def emit(name: str, us: float, derived: str) -> None:
-    row = f"{name},{us:.1f},{derived}"
-    ROWS.append(row)
-    print(row, flush=True)
+    ROWS.append({"name": name, "us_per_call": round(us, 1),
+                 "derived": derived})
+    print(f"{name},{us:.1f},{derived}", flush=True)
 
 
 # ---------------------------------------------------------------------------
 # Fig. 8a — POR sweep, full tree in memory
 # ---------------------------------------------------------------------------
 
-def bench_por_sweep() -> None:
+def bench_por_sweep(impl: str = "ref") -> None:
     cfg = bench_model()
     params = init_params(cfg, jax.random.key(0))
     rng = np.random.default_rng(0)
@@ -57,8 +75,8 @@ def bench_por_sweep() -> None:
         S = ((max(n_tree, 256) + 127) // 128) * 128
         bt, _ = tree_inputs(cfg, trees, S)
         bl, _ = baseline_inputs(cfg, trees, S)
-        t_tree, l_tree = timed_loss_grad(cfg, params, bt)
-        t_base, l_base = timed_loss_grad(cfg, params, bl)
+        t_tree, l_tree = timed_loss_grad(cfg, params, bt, impl=impl)
+        t_base, l_base = timed_loss_grad(cfg, params, bl, impl=impl)
         bound = 1.0 / (1.0 - real_por)
         emit(f"por_sweep_{int(por * 100)}", t_tree * 1e6,
              f"speedup={t_base / t_tree:.2f}x bound={bound:.2f}x "
@@ -90,7 +108,6 @@ def bench_partition_tokens() -> None:
 # ---------------------------------------------------------------------------
 
 def bench_partition_sweep() -> None:
-    import time as _t
     cfg = bench_model(n_layers=2)
     params = init_params(cfg, jax.random.key(0))
     rng = np.random.default_rng(2)
@@ -99,9 +116,9 @@ def bench_partition_sweep() -> None:
                                    tokens_per_path=128)
         C = 256
         partitioned_value_and_grad(cfg, params, tree, C)   # warm traces
-        t0 = _t.perf_counter()
+        t0 = time.perf_counter()
         l_p, _, info = partitioned_value_and_grad(cfg, params, tree, C)
-        t_part = _t.perf_counter() - t0
+        t_part = time.perf_counter() - t0
         S_flat = ((tree.max_path_tokens() + 127) // 128) * 128
         bl, _ = baseline_inputs(cfg, [tree], S_flat)
         t_base, l_base = timed_loss_grad(cfg, params, bl)
@@ -115,7 +132,7 @@ def bench_partition_sweep() -> None:
 # Fig. 7 — realistic agentic trees: speedup + loss deviation
 # ---------------------------------------------------------------------------
 
-def bench_realistic() -> None:
+def bench_realistic(impl: str = "ref") -> None:
     cfg = bench_model()
     params = init_params(cfg, jax.random.key(0))
     rng = np.random.default_rng(3)
@@ -128,8 +145,8 @@ def bench_realistic() -> None:
     por = dataset_por(trees)
     bt, _ = tree_inputs(cfg, trees, 1024)
     bl, _ = baseline_inputs(cfg, trees, 1024)
-    t_tree, l_tree = timed_loss_grad(cfg, params, bt)
-    t_base, l_base = timed_loss_grad(cfg, params, bl)
+    t_tree, l_tree = timed_loss_grad(cfg, params, bt, impl=impl)
+    t_base, l_base = timed_loss_grad(cfg, params, bl, impl=impl)
     emit("realistic_agentic", t_tree * 1e6,
          f"speedup={t_base / t_tree:.2f}x bound={1 / (1 - por):.2f}x "
          f"por={por:.3f} "
@@ -164,42 +181,163 @@ def bench_memory_overhead() -> None:
 # App. A.1 — kernel block-skip accounting
 # ---------------------------------------------------------------------------
 
-def bench_kernel_blocks() -> None:
+def _pack_greedy(seq_len: int, seed: int, n_trees: int, seg, max_depth=4):
+    """Greedily fill one seq_len row with random trees; returns the packed
+    TreeBatch and the kept trees (for building the linearized baseline of
+    the *same* data)."""
     from repro.core.packing import pack_trees
-    trees = trees_for_batch(9, n_trees=6, kind="random",
-                            seg_len_range=(8, 32), max_depth=4)
-    sers = [serialize_tree(t) for t in trees]
-    keep, used = [], 0
-    for s in sers:
-        if used + s.n <= 512:
-            keep.append(s)
+    trees = trees_for_batch(seed, n_trees=n_trees, kind="random",
+                            seg_len_range=seg, max_depth=max_depth)
+    used, keep = 0, []
+    for t in trees:
+        s = serialize_tree(t)
+        if used + s.n <= seq_len:
+            keep.append((t, s))
             used += s.n
-    tb = pack_trees(keep, 512, batch_size=1)
-    kv_last = tb.kv_last[0]
+    tb = pack_trees([s for _, s in keep], seq_len, batch_size=1)
+    return tb, [t for t, _ in keep]
+
+
+def bench_kernel_blocks() -> None:
+    from repro.kernels.tree_attention import block_live_mask
+    tb, _ = _pack_greedy(512, seed=9, n_trees=6, seg=(8, 32))
+    kv_last = np.asarray(tb.kv_last)[0]
     S, bq = 512, 64
-    nq = nk = S // bq
-    kmax = kv_last.reshape(nk, bq).max(-1)
-    live = skipped = 0
-    for qi in range(nq):
-        for ki in range(nk):
-            if ki * bq > qi * bq + bq - 1 or kmax[ki] < qi * bq:
-                skipped += 1
-            else:
-                live += 1
+    nq = S // bq
+    live_mask = block_live_mask(kv_last, S, bq, bq)
+    live = int(live_mask.sum())
+    skipped = live_mask.size - live
     causal_live = nq * (nq + 1) // 2
     emit("kernel_blocks", 0.0,
          f"live={live} skipped={skipped} causal_would_run={causal_live} "
          f"extra_skip_vs_causal={causal_live - live}")
 
 
-def main() -> None:
+# ---------------------------------------------------------------------------
+# App. A.1 — fused kernel wall time, fwd and fwd+bwd, tree vs linearized
+# ---------------------------------------------------------------------------
+
+def _timed(fn, *args, iters: int = 3) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def bench_kernel_fwd_bwd(smoke: bool = False) -> None:
+    """Time the Pallas op itself — forward, and forward+backward via
+    jax.grad — on tree-packed vs linearized-packed copies of the same
+    trees.  The backward now runs the fused kernels, so this measures the
+    training-step speedup the paper reports, not just inference."""
+    from repro.core.packing import pack_linear_paths
+    from repro.kernels.ops import tree_attention
+
+    if smoke:
+        S, H, Kh, hd, bq = 256, 4, 4, 16, 64
+        n_trees, seg, iters = 4, (8, 24), 2
+    else:
+        S, H, Kh, hd, bq = 1024, 8, 4, 64, 128
+        n_trees, seg, iters = 8, (16, 64), 3
+    tb, kept = _pack_greedy(S, seed=9, n_trees=n_trees, seg=seg)
+    lb = pack_linear_paths([t.linearize_paths() for t in kept], S)
+    rng = np.random.default_rng(9)
+    scale = hd ** -0.5
+
+    results = {}
+    for tag, kv_last in (("tree", np.asarray(tb.kv_last)),
+                         ("linear", np.asarray(lb.kv_last))):
+        B = kv_last.shape[0]
+        q = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(B, S, Kh, hd)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(B, S, Kh, hd)), jnp.float32)
+        kl = jnp.asarray(kv_last)
+        fwd = jax.jit(lambda q_, k_, v_:
+                      tree_attention(q_, k_, v_, kl, scale, bq, bq))
+        loss = lambda q_, k_, v_: (tree_attention(
+            q_, k_, v_, kl, scale, bq, bq) ** 2).sum()
+        fwd_bwd = jax.jit(jax.grad(loss, argnums=(0, 1, 2)))
+        t_f = _timed(fwd, q, k, v, iters=iters)
+        t_fb = _timed(fwd_bwd, q, k, v, iters=iters)
+        results[tag] = (t_f, t_fb, B)
+        emit(f"kernel_fwd_{tag}", t_f * 1e6, f"rows={B} S={S} block={bq}")
+        emit(f"kernel_fwd_bwd_{tag}", t_fb * 1e6,
+             f"rows={B} S={S} block={bq}")
+    (tf_t, tfb_t, _), (tf_l, tfb_l, _) = results["tree"], results["linear"]
+    emit("kernel_tree_vs_linear", 0.0,
+         f"fwd_speedup={tf_l / tf_t:.2f}x "
+         f"fwd_bwd_speedup={tfb_l / tfb_t:.2f}x")
+
+
+# ---------------------------------------------------------------------------
+# --smoke — tiny model fwd+bwd through the packed tree loss (CI gate)
+# ---------------------------------------------------------------------------
+
+def bench_smoke_model(impl: str) -> None:
+    """qwen1.5-0.5B-scale smoke config: one model-level fwd+bwd timing,
+    tree vs linearized packing, through loss_and_metrics."""
+    from repro.configs.qwen1p5_0p5b import smoke
+    cfg = smoke()
+    params = init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(5)
+    trees = [t for t in trees_for_batch(7, n_trees=4, kind="agentic",
+                                        num_turns=3, turn_len_range=(8, 24),
+                                        vocab_size=cfg.vocab_size)
+             if serialize_tree(t).n <= 256][:2]
+    bt, _ = tree_inputs(cfg, trees, 256)
+    bl, _ = baseline_inputs(cfg, trees, 256)
+    t_tree, l_tree = timed_loss_grad(cfg, params, bt, iters=2, impl=impl)
+    t_base, l_base = timed_loss_grad(cfg, params, bl, iters=2, impl=impl)
+    emit("smoke_model_fwd_bwd", t_tree * 1e6,
+         f"impl={impl} speedup={t_base / t_tree:.2f}x "
+         f"loss_rel={abs(float(l_tree - l_base)) / abs(float(l_base)):.1e}")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny configs, CPU-friendly, < 2 min (CI gate)")
+    ap.add_argument("--impl", default="ref",
+                    choices=("ref", "chunked", "pallas"),
+                    help="attention impl for model-level benches")
+    ap.add_argument("--out", default=None,
+                    help="write rows as a JSON artifact to this path")
+    args = ap.parse_args(argv)
+    if args.out:
+        parent = os.path.dirname(os.path.abspath(args.out))
+        if not os.path.isdir(parent):
+            ap.error(f"--out directory does not exist: {parent}")
+
+    t0 = time.perf_counter()
     print("name,us_per_call,derived")
-    bench_por_sweep()
-    bench_partition_tokens()
-    bench_partition_sweep()
-    bench_realistic()
-    bench_memory_overhead()
-    bench_kernel_blocks()
+    if args.smoke:
+        bench_kernel_fwd_bwd(smoke=True)
+        bench_smoke_model(args.impl)
+        bench_kernel_blocks()
+    else:
+        bench_por_sweep(args.impl)
+        bench_partition_tokens()
+        bench_partition_sweep()
+        bench_realistic(args.impl)
+        bench_memory_overhead()
+        bench_kernel_blocks()
+        bench_kernel_fwd_bwd()
+    if args.out:
+        artifact = {
+            "smoke": args.smoke,
+            "impl": args.impl,
+            "backend": jax.default_backend(),
+            "jax_version": jax.__version__,
+            "wall_s": round(time.perf_counter() - t0, 2),
+            "rows": ROWS,
+        }
+        with open(args.out, "w") as f:
+            json.dump(artifact, f, indent=2)
+        print(f"wrote {args.out}", flush=True)
 
 
 if __name__ == "__main__":

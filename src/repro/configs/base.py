@@ -7,7 +7,7 @@ card config plus a reduced ``smoke()`` variant for CPU tests.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 

@@ -22,7 +22,6 @@ Each partition gets:
 """
 from __future__ import annotations
 
-import copy
 from dataclasses import dataclass, field
 from typing import Optional
 

@@ -23,7 +23,6 @@ All host-side, numpy only; the jitted model consumes the arrays.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
 from typing import Iterator, Optional
 

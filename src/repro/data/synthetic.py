@@ -9,7 +9,6 @@ Two flavors, matching the paper's experiments:
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import numpy as np
 

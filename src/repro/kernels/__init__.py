@@ -1,3 +1,5 @@
 # Pallas TPU kernels for the paper's compute hot spot: tree flash
-# attention (tree_attention.py) + jit wrapper (ops.py) + jnp oracle
-# (ref.py).  Validated with interpret=True on CPU.
+# attention forward (tree_attention.py), fused flash-recompute backward
+# (tree_attention_bwd.py), custom_vjp wrapper (ops.py) + jnp oracle
+# (ref.py — test oracle only, no longer on the training path).
+# Validated with interpret=True on CPU.

@@ -1,47 +1,68 @@
 """jit'd public wrapper for the tree-attention kernel.
 
-Dispatches to the Pallas TPU kernel on TPU backends and to interpret mode
+Dispatches to the Pallas TPU kernels on TPU backends and to interpret mode
 on CPU (kernel body executed in Python — bit-level semantics identical).
-A custom_vjp provides the backward pass by flash-style recomputation
-through the reference implementation, keeping training usable behind the
-same entry point; on TPU the forward hot path is the kernel.
+The custom_vjp is fully fused: the forward saves only O(S) logsumexp
+residuals and the backward runs the flash-style recomputation kernels in
+kernels/tree_attention_bwd.py (dq, dk, dv) with the same visibility
+predicate and block-skip rule as the forward.  The dense jnp reference
+(kernels/ref.py) is no longer on the training path — it survives purely
+as the test oracle.
 """
 from __future__ import annotations
 
 import functools
 
 import jax
-import jax.numpy as jnp
 
-from repro.kernels.ref import tree_attention_ref
 from repro.kernels.tree_attention import tree_attention as _pallas_fwd
+from repro.kernels.tree_attention_bwd import tree_attention_bwd as _pallas_bwd
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _fit_block(S: int, want: int) -> int:
+    """Largest block ≤ ``want`` dividing S (kernels require S % block == 0);
+    halves until it fits.  Refuses pathological fits: a block below the
+    TPU sublane multiple of 8 (unless the whole row is one block) would
+    silently compile a thousands-of-programs grid — pad S instead."""
+    want = min(want, S)
+    while want > 1 and S % want:
+        want //= 2
+    if want % 8 and want != S:
+        raise ValueError(
+            f"no usable block for S={S} (fitted {want}); pad the sequence "
+            f"to a multiple of 8 for the pallas impl")
+    return want
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
 def tree_attention(q, k, v, kv_last, scale: float,
                    block_q: int = 128, block_k: int = 128):
-    return _pallas_fwd(q, k, v, kv_last, scale, block_q=block_q,
-                       block_k=block_k, interpret=not _on_tpu())
+    S = q.shape[1]
+    return _pallas_fwd(q, k, v, kv_last, scale, block_q=_fit_block(S, block_q),
+                       block_k=_fit_block(S, block_k),
+                       interpret=not _on_tpu())
 
 
 def _fwd(q, k, v, kv_last, scale, block_q, block_k):
-    o = _pallas_fwd(q, k, v, kv_last, scale, block_q=block_q,
-                    block_k=block_k, interpret=not _on_tpu())
-    return o, (q, k, v, kv_last)
+    S = q.shape[1]
+    o, lse = _pallas_fwd(q, k, v, kv_last, scale,
+                         block_q=_fit_block(S, block_q),
+                         block_k=_fit_block(S, block_k), save_residuals=True,
+                         interpret=not _on_tpu())
+    return o, (q, k, v, kv_last, o, lse)
 
 
 def _bwd(scale, block_q, block_k, res, do):
-    q, k, v, kv_last = res
-    # Recompute-based backward via the jnp reference (exact same mask
-    # semantics).  A dedicated Pallas dq/dk/dv kernel is a §Perf follow-up.
-    _, vjp = jax.vjp(lambda q_, k_, v_:
-                     tree_attention_ref(q_, k_, v_, kv_last, scale),
-                     q, k, v)
-    dq, dk, dv = vjp(do)
+    q, k, v, kv_last, o, lse = res
+    S = q.shape[1]
+    dq, dk, dv = _pallas_bwd(q, k, v, kv_last, o, lse, do, scale,
+                             block_q=_fit_block(S, block_q),
+                             block_k=_fit_block(S, block_k),
+                             interpret=not _on_tpu())
     return dq, dk, dv, None
 
 

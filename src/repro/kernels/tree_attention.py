@@ -16,6 +16,10 @@ kernel (App. A.1).  The TPU-native equivalent built here:
     the FlashMask block-sparsity analogue; skipped blocks still have their
     DMA issued by the pipeline (removing it needs a data-dependent grid —
     logged as a §Perf follow-up in EXPERIMENTS.md).
+  - ``save_residuals=True`` additionally emits the per-row logsumexp
+    ``lse[b, h, i] = m_i + log(l_i)`` (``NEG_INF`` for fully-masked rows),
+    the O(S) statistic the fused backward (tree_attention_bwd.py) needs to
+    regenerate softmax probabilities without the O(S²) matrix.
 
 GQA: q head h reads kv head h // (H/Kh) via the BlockSpec index map.
 Validated on CPU with interpret=True against kernels/ref.py.
@@ -30,11 +34,44 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
+def block_kmax_flat(kv_last, B: int, nk: int, block_k: int):
+    """Per-(batch, kv-block) max of kv_last, flattened to 1-D for scalar
+    prefetch; indexed with b*nk + ki inside the kernels.  Shared by the
+    forward and both backward kernels so the skip inputs cannot drift."""
+    return kv_last.reshape(B, nk, block_k).max(-1).reshape(B * nk)
+
+
+def block_live(q_start, q_end, kv_start, block_max):
+    """The block-skip predicate (forward AND backward): a (q-block,
+    kv-block) pair is live unless entirely anti-causal (kv_start > q_end)
+    or entirely invisible (block_max = max_j kv_last[j] < q_start).
+    Works on traced kernel scalars and on numpy arrays alike."""
+    return (kv_start <= q_end) & (block_max >= q_start)
+
+
+def block_live_mask(kv_last, S: int, block_q: int, block_k: int):
+    """[nq, nk] bool per batch row: which (q-block, kv-block) pairs the
+    kernel actually computes.  Used by benchmarks to report block
+    sparsity."""
+    import numpy as np
+    kv_last = np.asarray(kv_last)
+    nq, nk = S // block_q, S // block_k
+    kmax = kv_last.reshape(nk, block_k).max(-1)
+    qi = np.arange(nq)[:, None]
+    ki = np.arange(nk)[None, :]
+    return block_live(qi * block_q, qi * block_q + block_q - 1,
+                      ki * block_k, kmax[None, :])
+
+
 def tree_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                    kv_last: jax.Array, scale: float, *,
                    block_q: int = 128, block_k: int = 128,
-                   interpret: bool = False) -> jax.Array:
-    """q: [B,S,H,hd]; k/v: [B,S,Kh,hd]; kv_last: [B,S] int32 → [B,S,H,hd]."""
+                   save_residuals: bool = False,
+                   interpret: bool = False):
+    """q: [B,S,H,hd]; k/v: [B,S,Kh,hd]; kv_last: [B,S] int32 → [B,S,H,hd].
+
+    With ``save_residuals`` returns ``(o, lse)`` where lse is [B,H,S] f32.
+    """
     B, S, H, hd = q.shape
     Kh = k.shape[2]
     G = max(1, H // Kh)
@@ -43,12 +80,13 @@ def tree_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
     nq, nk = S // block_q, S // block_k
     kv_last = kv_last.astype(jnp.int32)
-    # skip predicate: per-(batch, kv block) max of kv_last, flattened to 1-D
-    # for scalar prefetch; indexed with b*nk + ki inside the kernel.
-    kv_last_max_flat = kv_last.reshape(B, nk, block_k).max(-1).reshape(B * nk)
+    kv_last_max_flat = block_kmax_flat(kv_last, B, nk, block_k)
 
-    def kernel(kmax_ref, q_ref, k_ref, v_ref, kl_ref, o_ref,
-               m_scr, l_scr, acc_scr):
+    def kernel(kmax_ref, q_ref, k_ref, v_ref, kl_ref, o_ref, *rest):
+        if save_residuals:
+            lse_ref, m_scr, l_scr, acc_scr = rest
+        else:
+            m_scr, l_scr, acc_scr = rest
         b = pl.program_id(0)
         qi = pl.program_id(2)
         ki = pl.program_id(3)
@@ -63,8 +101,7 @@ def tree_attention(q: jax.Array, k: jax.Array, v: jax.Array,
             l_scr[...] = jnp.zeros_like(l_scr)
             acc_scr[...] = jnp.zeros_like(acc_scr)
 
-        block_max = kmax_ref[b * nk + ki]
-        live = (kv_start <= q_end) & (block_max >= q_start)
+        live = block_live(q_start, q_end, kv_start, kmax_ref[b * nk + ki])
 
         @pl.when(live)
         def _compute():
@@ -97,8 +134,21 @@ def tree_attention(q: jax.Array, k: jax.Array, v: jax.Array,
             o = acc_scr[...] / jnp.maximum(l, 1e-37)[:, None]
             o = jnp.where((l > 0)[:, None], o, 0.0)
             o_ref[0, :, 0, :] = o.astype(o_ref.dtype)
+            if save_residuals:
+                m = m_scr[...]
+                lse = jnp.where(l > 0, m + jnp.log(jnp.maximum(l, 1e-37)),
+                                NEG_INF)
+                lse_ref[0, 0, :] = lse
 
-    return pl.pallas_call(
+    out_shape = [jax.ShapeDtypeStruct((B, S, H, hd), q.dtype)]
+    out_specs = [pl.BlockSpec((1, block_q, 1, hd),
+                              lambda b, h, qi, ki, kmax: (b, qi, h, 0))]
+    if save_residuals:
+        out_shape.append(jax.ShapeDtypeStruct((B, H, S), jnp.float32))
+        out_specs.append(pl.BlockSpec((1, 1, block_q),
+                                      lambda b, h, qi, ki, kmax: (b, h, qi)))
+
+    out = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
@@ -113,14 +163,16 @@ def tree_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                 pl.BlockSpec((1, block_k),
                              lambda b, h, qi, ki, kmax: (b, ki)),
             ],
-            out_specs=pl.BlockSpec((1, block_q, 1, hd),
-                                   lambda b, h, qi, ki, kmax: (b, qi, h, 0)),
+            out_specs=out_specs,
             scratch_shapes=[
                 pltpu.VMEM((block_q,), jnp.float32),
                 pltpu.VMEM((block_q,), jnp.float32),
                 pltpu.VMEM((block_q, hd), jnp.float32),
             ],
         ),
-        out_shape=jax.ShapeDtypeStruct((B, S, H, hd), q.dtype),
+        out_shape=out_shape,
         interpret=interpret,
     )(kv_last_max_flat, q, k, v, kv_last)
+    if save_residuals:
+        return out[0], out[1]
+    return out[0]

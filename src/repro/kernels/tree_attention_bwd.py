@@ -1,0 +1,268 @@
+"""Pallas TPU kernels: fused backward for tree flash attention.
+
+Flash-style recomputation: the forward (tree_attention.py with
+``save_residuals=True``) saves only the per-row logsumexp
+``lse[b,h,i] = m_i + log l_i`` — O(S) instead of the O(S²) probability
+matrix — and the backward regenerates ``p_ij = exp(s_ij − lse_i)`` block
+by block on the fly.  With ``Δ_i = Σ_d do_id·o_id`` (precomputed XLA-side,
+one elementwise reduction):
+
+    dv_j = Σ_i p_ij do_i
+    ds_ij = p_ij (do_i·v_j − Δ_i) · scale
+    dq_i = Σ_j ds_ij k_j
+    dk_j = Σ_i ds_ij q_i
+
+Both kernels reuse the forward's two-comparison visibility predicate
+(``j ≤ i ∧ kv_last[j] ≥ i``) and its block-skip rule: a (q-block,
+kv-block) pair is skipped when anti-causal (kv_start > q_end) or entirely
+invisible (max_j kv_last[j] < q_start).  Fully-masked rows (padding,
+lse = NEG_INF) contribute nothing because the visibility mask already
+zeroes every p entry in their row.
+
+Two kernels because the two reductions run along opposite grid axes and
+TPU output revisiting must be consecutive:
+
+  - **dq**: grid (B, H, nq, nk) — innermost over kv blocks, dq accumulated
+    in VMEM scratch, written once at the last kv step (mirrors forward).
+  - **dk/dv**: grid (B, Kh, nk, G, nq) — innermost over q blocks *and* the
+    G query heads of the group, so the GQA head-group reduction happens
+    in-kernel in the same VMEM accumulator (no [B,S,H,hd] staging buffer
+    + XLA reduction afterwards).
+
+Validated on CPU with interpret=True against jax.vjp through
+kernels/ref.py (tests/test_kernels_bwd.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.tree_attention import block_kmax_flat, block_live
+
+NEG_INF = -1e30
+
+
+def _vis_and_p(qq, kk, kl, lse, scale, q_start, kv_start, block_q, block_k):
+    """Recompute the masked probability block p_ij = exp(s_ij − lse_i)."""
+    logits = jax.lax.dot_general(
+        qq, kk, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale
+    i_idx = q_start + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    j_idx = kv_start + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    vis = (j_idx <= i_idx) & (kl[None, :] >= i_idx)
+    # clamp the exponent: invisible entries are discarded by the select but
+    # must not overflow to inf first (inf is fine for select, but keep the
+    # VPU in normal range); visible entries satisfy s ≤ m ≤ lse + log l.
+    expo = jnp.where(vis, logits - lse[:, None], NEG_INF)
+    return jnp.where(vis, jnp.exp(expo), 0.0)
+
+
+def _bwd_dq(q, k, v, kv_last, lse, delta, do, scale,
+            block_q, block_k, interpret):
+    B, S, H, hd = q.shape
+    Kh = k.shape[2]
+    G = max(1, H // Kh)
+    nq, nk = S // block_q, S // block_k
+    kmax_flat = block_kmax_flat(kv_last, B, nk, block_k)
+
+    def kernel(kmax_ref, q_ref, k_ref, v_ref, kl_ref, lse_ref, dl_ref,
+               do_ref, dq_ref, dq_scr):
+        b = pl.program_id(0)
+        qi = pl.program_id(2)
+        ki = pl.program_id(3)
+        num_kv = pl.num_programs(3)
+        q_start = qi * block_q
+        q_end = q_start + block_q - 1
+        kv_start = ki * block_k
+
+        @pl.when(ki == 0)
+        def _init():
+            dq_scr[...] = jnp.zeros_like(dq_scr)
+
+        live = block_live(q_start, q_end, kv_start, kmax_ref[b * nk + ki])
+
+        @pl.when(live)
+        def _compute():
+            qq = q_ref[0, :, 0, :].astype(jnp.float32)      # [BQ, hd]
+            kk = k_ref[0, :, 0, :].astype(jnp.float32)      # [BK, hd]
+            vv = v_ref[0, :, 0, :].astype(jnp.float32)
+            kl = kl_ref[0, :]
+            lse = lse_ref[0, 0, :]                          # [BQ]
+            dlt = dl_ref[0, 0, :]                           # [BQ]
+            dd = do_ref[0, :, 0, :].astype(jnp.float32)     # [BQ, hd]
+            p = _vis_and_p(qq, kk, kl, lse, scale, q_start, kv_start,
+                           block_q, block_k)
+            dp = jax.lax.dot_general(                        # do·vᵀ [BQ,BK]
+                dd, vv, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            ds = p * (dp - dlt[:, None]) * scale
+            dq_scr[...] += jax.lax.dot_general(              # ds·k [BQ,hd]
+                ds, kk, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+
+        @pl.when(ki == num_kv - 1)
+        def _finalize():
+            dq_ref[0, :, 0, :] = dq_scr[...].astype(dq_ref.dtype)
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B, H, nq, nk),
+            in_specs=[
+                pl.BlockSpec((1, block_q, 1, hd),
+                             lambda b, h, qi, ki, kmax: (b, qi, h, 0)),
+                pl.BlockSpec((1, block_k, 1, hd),
+                             lambda b, h, qi, ki, kmax: (b, ki, h // G, 0)),
+                pl.BlockSpec((1, block_k, 1, hd),
+                             lambda b, h, qi, ki, kmax: (b, ki, h // G, 0)),
+                pl.BlockSpec((1, block_k),
+                             lambda b, h, qi, ki, kmax: (b, ki)),
+                pl.BlockSpec((1, 1, block_q),
+                             lambda b, h, qi, ki, kmax: (b, h, qi)),
+                pl.BlockSpec((1, 1, block_q),
+                             lambda b, h, qi, ki, kmax: (b, h, qi)),
+                pl.BlockSpec((1, block_q, 1, hd),
+                             lambda b, h, qi, ki, kmax: (b, qi, h, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, block_q, 1, hd),
+                                   lambda b, h, qi, ki, kmax: (b, qi, h, 0)),
+            scratch_shapes=[pltpu.VMEM((block_q, hd), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, S, H, hd), q.dtype),
+        interpret=interpret,
+    )(kmax_flat, q, k, v, kv_last, lse, delta, do)
+
+
+def _bwd_dkv(q, k, v, kv_last, lse, delta, do, scale,
+             block_q, block_k, interpret):
+    B, S, H, hd = q.shape
+    Kh = k.shape[2]
+    G = max(1, H // Kh)
+    nq, nk = S // block_q, S // block_k
+    kmax_flat = block_kmax_flat(kv_last, B, nk, block_k)
+
+    def kernel(kmax_ref, q_ref, k_ref, v_ref, kl_ref, lse_ref, dl_ref,
+               do_ref, dk_ref, dv_ref, dk_scr, dv_scr):
+        b = pl.program_id(0)
+        ki = pl.program_id(2)
+        g = pl.program_id(3)
+        qi = pl.program_id(4)
+        num_g = pl.num_programs(3)
+        num_q = pl.num_programs(4)
+        q_start = qi * block_q
+        q_end = q_start + block_q - 1
+        kv_start = ki * block_k
+
+        @pl.when((g == 0) & (qi == 0))
+        def _init():
+            dk_scr[...] = jnp.zeros_like(dk_scr)
+            dv_scr[...] = jnp.zeros_like(dv_scr)
+
+        live = block_live(q_start, q_end, kv_start, kmax_ref[b * nk + ki])
+
+        @pl.when(live)
+        def _compute():
+            qq = q_ref[0, :, 0, :].astype(jnp.float32)      # [BQ, hd]
+            kk = k_ref[0, :, 0, :].astype(jnp.float32)      # [BK, hd]
+            vv = v_ref[0, :, 0, :].astype(jnp.float32)
+            kl = kl_ref[0, :]
+            lse = lse_ref[0, 0, :]
+            dlt = dl_ref[0, 0, :]
+            dd = do_ref[0, :, 0, :].astype(jnp.float32)     # [BQ, hd]
+            p = _vis_and_p(qq, kk, kl, lse, scale, q_start, kv_start,
+                           block_q, block_k)
+            dv_scr[...] += jax.lax.dot_general(              # pᵀ·do [BK,hd]
+                p, dd, (((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            dp = jax.lax.dot_general(
+                dd, vv, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            ds = p * (dp - dlt[:, None]) * scale
+            dk_scr[...] += jax.lax.dot_general(              # dsᵀ·q [BK,hd]
+                ds, qq, (((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+
+        @pl.when((g == num_g - 1) & (qi == num_q - 1))
+        def _finalize():
+            dk_ref[0, :, 0, :] = dk_scr[...].astype(dk_ref.dtype)
+            dv_ref[0, :, 0, :] = dv_scr[...].astype(dv_ref.dtype)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B, Kh, nk, G, nq),
+            in_specs=[
+                pl.BlockSpec(
+                    (1, block_q, 1, hd),
+                    lambda b, kh, ki, g, qi, kmax: (b, qi, kh * G + g, 0)),
+                pl.BlockSpec(
+                    (1, block_k, 1, hd),
+                    lambda b, kh, ki, g, qi, kmax: (b, ki, kh, 0)),
+                pl.BlockSpec(
+                    (1, block_k, 1, hd),
+                    lambda b, kh, ki, g, qi, kmax: (b, ki, kh, 0)),
+                pl.BlockSpec(
+                    (1, block_k),
+                    lambda b, kh, ki, g, qi, kmax: (b, ki)),
+                pl.BlockSpec(
+                    (1, 1, block_q),
+                    lambda b, kh, ki, g, qi, kmax: (b, kh * G + g, qi)),
+                pl.BlockSpec(
+                    (1, 1, block_q),
+                    lambda b, kh, ki, g, qi, kmax: (b, kh * G + g, qi)),
+                pl.BlockSpec(
+                    (1, block_q, 1, hd),
+                    lambda b, kh, ki, g, qi, kmax: (b, qi, kh * G + g, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec(
+                    (1, block_k, 1, hd),
+                    lambda b, kh, ki, g, qi, kmax: (b, ki, kh, 0)),
+                pl.BlockSpec(
+                    (1, block_k, 1, hd),
+                    lambda b, kh, ki, g, qi, kmax: (b, ki, kh, 0)),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((block_k, hd), jnp.float32),
+                pltpu.VMEM((block_k, hd), jnp.float32),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, Kh, hd), k.dtype),
+            jax.ShapeDtypeStruct((B, S, Kh, hd), v.dtype),
+        ],
+        interpret=interpret,
+    )(kmax_flat, q, k, v, kv_last, lse, delta, do)
+    return out[0], out[1]
+
+
+def tree_attention_bwd(q: jax.Array, k: jax.Array, v: jax.Array,
+                       kv_last: jax.Array, o: jax.Array, lse: jax.Array,
+                       do: jax.Array, scale: float, *,
+                       block_q: int = 128, block_k: int = 128,
+                       interpret: bool = False):
+    """Fused dq/dk/dv for tree attention.
+
+    q/o/do: [B,S,H,hd]; k/v: [B,S,Kh,hd]; kv_last: [B,S] int32;
+    lse: [B,H,S] f32 from the forward's ``save_residuals=True``.
+    Returns (dq, dk, dv) in the input dtypes.
+    """
+    B, S, H, hd = q.shape
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+    kv_last = kv_last.astype(jnp.int32)
+    # Δ_i = Σ_d do_id o_id, [B,H,S] — cheap elementwise reduce, XLA-side.
+    delta = (do.astype(jnp.float32) * o.astype(jnp.float32)
+             ).sum(-1).transpose(0, 2, 1)
+    dq = _bwd_dq(q, k, v, kv_last, lse, delta, do, scale,
+                 block_q, block_k, interpret)
+    dk, dv = _bwd_dkv(q, k, v, kv_last, lse, delta, do, scale,
+                      block_q, block_k, interpret)
+    return dq, dk, dv

@@ -17,7 +17,6 @@ Sliding-window attention restricts additionally to pos_i − pos_j < window
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional
 
 import jax

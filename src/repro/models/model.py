@@ -3,7 +3,6 @@ from __future__ import annotations
 
 from typing import Any, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

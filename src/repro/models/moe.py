@@ -17,7 +17,6 @@ attention/SSM fixes; the router sees DFS rows transparently.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -10,13 +10,11 @@ baseline (Eq. 5).
 """
 from __future__ import annotations
 
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models import attention as attn_mod
 from repro.models.attention import (attention, init_attention,
                                     project_cross_kv)
 from repro.models.layers import (embed, init_embedding, init_lm_head,

@@ -14,7 +14,7 @@ Cache kinds:
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +28,7 @@ from repro.models.ssm.mamba2 import init_mamba2_cache, mamba2_decode
 from repro.models.ssm.rwkv6 import (init_rwkv6_cache,
                                     rwkv6_channelmix_decode,
                                     rwkv6_timemix_decode)
-from repro.models.transformer import _dtype, _layer_kinds, layer_groups
+from repro.models.transformer import _dtype, layer_groups
 from repro.sharding import shard_logits
 
 

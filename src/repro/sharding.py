@@ -17,7 +17,6 @@ from contextlib import contextmanager
 from typing import Any, Optional
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 

@@ -7,7 +7,7 @@ PartitionSpec via sharding.param_shardings on the state's leaves).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -9,10 +9,8 @@ which is what makes the speedup comparison apples-to-apples.
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models.model import loss_and_metrics

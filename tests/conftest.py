@@ -1,5 +1,4 @@
 import numpy as np
-import pytest
 
 from repro.configs.base import (AttnCfg, EncDecCfg, HybridCfg, ModelConfig,
                                 MoECfg, SSMCfg)

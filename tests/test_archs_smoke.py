@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ARCH_IDS, get_config, supports_shape
+from repro.configs import ARCH_IDS, get_config
 from repro.core.packing import pack_trees
 from repro.core.tree import serialize_tree
 from repro.data.synthetic import trees_for_batch
@@ -15,6 +15,8 @@ from repro.models.model import (init_params, loss_and_metrics, needs_chunks,
                                 prepare_batch)
 from repro.train.optimizer import OptimizerConfig, init_opt_state
 from repro.train.train_step import make_train_step
+
+pytestmark = pytest.mark.slow  # every registered arch config, ~2 min
 
 
 def _smoke_batch(cfg, seed=0, S=64):

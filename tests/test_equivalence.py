@@ -109,6 +109,62 @@ def test_uniform_loss_mode_differs_but_finite():
     assert abs(float(l_sep) - float(l_uni)) > 1e-3
 
 
+def test_gradient_restoration_shared_prefix_sums_branches():
+    """Gradient Restoration (paper §3.3) at the kernel level: with the
+    fused Pallas vjp, dk/dv on a shared prefix equal the *sum* of the
+    gradients that prefix receives in each standalone branch pass, and
+    dq on every branch equals its standalone dq."""
+    from repro.kernels.ops import tree_attention
+
+    rng = np.random.default_rng(43)
+    P, L, H, hd = 16, 24, 4, 16          # prefix len, branch len
+    S = P + 2 * L                        # DFS: [prefix, branch1, branch2]
+    scale = hd ** -0.5
+
+    def rand(*shape):
+        return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+    q = rand(1, S, H, hd)
+    k = rand(1, S, H, hd)
+    v = rand(1, S, H, hd)
+    # gradient flows in from branch tokens only — a per-branch run counts
+    # its own prefix-query loss once, so summing two runs would double it;
+    # restoration is about what the *branches* send back to the prefix.
+    do = rand(1, S, H, hd).at[:, :P].set(0.0)
+
+    # tree mask: prefix visible to everything, each branch only to itself
+    kv_last = np.zeros((1, S), np.int32)
+    kv_last[0, :P] = S - 1
+    kv_last[0, P:P + L] = P + L - 1
+    kv_last[0, P + L:] = S - 1
+    kv_last = jnp.asarray(kv_last)
+    _, vjp = jax.vjp(lambda q_, k_, v_:
+                     tree_attention(q_, k_, v_, kv_last, scale, 8, 8),
+                     q, k, v)
+    dq_t, dk_t, dv_t = vjp(do)
+
+    # standalone branch passes: rows [prefix + branch_b], plain causal
+    acc_dk = np.zeros((P, H, hd), np.float32)
+    acc_dv = np.zeros((P, H, hd), np.float32)
+    for b0 in (P, P + L):
+        sel = np.r_[0:P, b0:b0 + L]
+        qb, kb, vb, dob = (x[:, sel] for x in (q, k, v, do))
+        kl_b = jnp.full((1, P + L), P + L - 1, jnp.int32)
+        _, vjp_b = jax.vjp(lambda q_, k_, v_:
+                           tree_attention(q_, k_, v_, kl_b, scale, 8, 8),
+                           qb, kb, vb)
+        dqb, dkb, dvb = vjp_b(dob)
+        acc_dk += np.asarray(dkb[0, :P])
+        acc_dv += np.asarray(dvb[0, :P])
+        np.testing.assert_allclose(np.asarray(dq_t[0, b0:b0 + L]),
+                                   np.asarray(dqb[0, P:]),
+                                   atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(dk_t[0, :P]), acc_dk,
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(dv_t[0, :P]), acc_dv,
+                               atol=1e-5, rtol=1e-5)
+
+
 def test_tree_forward_equals_each_branch_forward():
     """Forward equivalence (Eq. 6): per-token log-prob in the DFS pass
     matches the token's log-prob in its standalone branch pass."""

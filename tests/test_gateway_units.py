@@ -1,6 +1,5 @@
 """Unit tests for the gateway plumbing: the _concat_tail/_route_tail
 adjoint pair, and gather_prev's gateway-context slots."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 

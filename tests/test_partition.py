@@ -22,6 +22,8 @@ from repro.data.synthetic import random_tree
 from repro.models.model import init_params, loss_and_metrics, needs_chunks, \
     prepare_batch
 
+pytestmark = pytest.mark.slow  # multi-minute partition equivalences
+
 
 def get_tree(seed=0, lo=60, hi=120):
     for s in range(seed, seed + 300):

@@ -6,12 +6,15 @@ serialization arrays, so if these hold for arbitrary trees, the layer
 equivalences reduce to the (separately tested) layer math.
 """
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
 from repro.core.packing import pack_linear_paths, pack_trees
 from repro.core.tree import (TrajectoryTree, TreeNode, serialize_tree,
                              visibility_mask)
 from repro.models.layers import prev_powers
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 
 @st.composite

@@ -14,6 +14,8 @@ from repro.models.model import (init_params, needs_chunks, prepare_batch)
 from repro.models.transformer import forward
 from repro.serve.decode import decode_step, init_cache
 
+pytestmark = pytest.mark.slow  # per-family decode loops, ~2 min
+
 FAMILIES = ["dense", "moe", "ssm_rwkv6", "ssm_mamba2", "ssm_gdn", "hybrid"]
 
 
@@ -86,7 +88,7 @@ def test_audio_encdec_decode():
     ref = logits_from_hidden(params["embed"], params.get("lm_head"), h)[0]
 
     # decode: encoder out → cross cache, then token-by-token
-    from repro.models.transformer import _scan_group, layer_groups
+    from repro.models.transformer import _scan_group
     from repro.models.layers import rmsnorm
     enc_meta = dict(
         pos_ids=jnp.broadcast_to(jnp.arange(F, dtype=jnp.int32), (B, F)),

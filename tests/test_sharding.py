@@ -1,8 +1,5 @@
 """Sharding rules: per-tensor PartitionSpecs, divisibility fallbacks,
 FSDP second axis, batch specs.  Pure spec logic — no devices needed."""
-import jax
-import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.sharding import param_spec

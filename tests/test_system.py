@@ -6,6 +6,8 @@ with fewer token slots computed (the speedup source).
 """
 import jax
 import numpy as np
+import pytest
+
 
 from conftest import tiny_cfg
 from repro.core.packing import pack_linear_paths, pack_trees
@@ -17,6 +19,7 @@ from repro.train.optimizer import OptimizerConfig, init_opt_state
 from repro.train.train_step import make_train_step
 
 
+@pytest.mark.slow
 def test_end_to_end_tree_training_runs_and_learns():
     cfg = tiny_cfg("dense")
     params = init_params(cfg, jax.random.key(0))

@@ -71,7 +71,7 @@ def test_checkpoint_roundtrip(tmp_path):
     assert os.path.exists(tmp_path / "ck" / "manifest.json")
 
 
-def _run_mode(mode: str, steps: int = 12):
+def _run_mode(mode: str, steps: int = 12, repeat_first_batch: bool = False):
     cfg = tiny_cfg("dense")
     lc = LoaderConfig(seq_len=256, batch_rows=2, trees_per_batch=4,
                       mode=mode, kind="random", seed=3,
@@ -79,18 +79,24 @@ def _run_mode(mode: str, steps: int = 12):
     params = init_params(cfg, jax.random.key(0))
     opt_cfg = OptimizerConfig(lr=3e-3, warmup_steps=2, total_steps=steps)
     step = make_train_step(cfg, opt_cfg, donate=False)
-    opt = jax.jit(lambda p: p)(init_opt_state(params))  # noop: keep fresh
-    from repro.train.optimizer import init_opt_state as ios
-    opt = ios(params)
+    opt = init_opt_state(params)
+    if repeat_first_batch:
+        inputs, _ = next(iter(batches(cfg, lc, 1)))
+        stream = (inputs for _ in range(steps))
+    else:
+        stream = (b for b, _ in batches(cfg, lc, steps))
     losses = []
-    for inputs, _ in batches(cfg, lc, steps):
+    for inputs in stream:
         params, opt, m = step(params, opt, inputs)
         losses.append(float(m["token_nll_mean"]))
     return losses
 
 
 def test_loss_decreases_tree_mode():
-    losses = _run_mode("tree")
+    # fresh random trees every step carry no learnable signal beyond token
+    # marginals, so descend on a fixed batch — deterministic, not a coin
+    # flip on the sampling noise of the first/last batches.
+    losses = _run_mode("tree", repeat_first_batch=True)
     assert losses[-1] < losses[0]
     assert np.isfinite(losses).all()
 
