@@ -13,6 +13,9 @@ the same rows as a JSON artifact for CI:
                      App. A.1 — fused Pallas kernel wall time, forward and
                      forward+backward (jax.grad through the op), tree
                      packing vs linearized packing of the same trees
+  packed_partition   §3.4 — batched wave-scheduled partitioned step:
+                     timing vs the whole-tree pass + tree-vs-partitioned
+                     token accounting (unique / padded)
 
 Flags:
   --smoke      tiny qwen1.5-0.5B-scale config, CPU-interpret friendly,
@@ -274,6 +277,53 @@ def bench_kernel_fwd_bwd(smoke: bool = False) -> None:
 
 
 # ---------------------------------------------------------------------------
+# §3.4 — batched wave-scheduled partitioned training (oversized trees)
+# ---------------------------------------------------------------------------
+
+def bench_packed_partition(smoke: bool = False) -> None:
+    """Step timing + token accounting of the batched partition pipeline:
+    trees too big for one row train via wave-scheduled Tree Packing over
+    partitions vs the whole-tree pass on one oversized row."""
+    from repro.core.gateway import packed_partitioned_value_and_grad
+
+    if smoke:
+        cfg = bench_model(n_layers=2, d_model=64)
+        S, C, turns, seg = 128, 64, 5, (12, 40)
+    else:
+        cfg = bench_model(n_layers=2)
+        S, C, turns, seg = 512, 256, 7, (40, 160)
+    params = init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(6)
+    trees = []
+    while len(trees) < 2:
+        t = agentic_tree(rng, num_turns=turns, turn_len_range=seg,
+                         vocab_size=1024)
+        if serialize_tree(t).n > S:          # genuinely oversized
+            trees.append(t)
+    uniq = sum(t.num_unique_tokens() for t in trees)
+
+    packed_partitioned_value_and_grad(cfg, params, trees, C,
+                                      seq_len=S)      # warm executables
+    t0 = time.perf_counter()
+    l_p, _, info = packed_partitioned_value_and_grad(cfg, params, trees,
+                                                     C, seq_len=S)
+    t_part = time.perf_counter() - t0
+
+    # whole-tree reference: each tree on one (oversized) row
+    S_ref = ((max(serialize_tree(t).n for t in trees) + 127) // 128) * 128
+    bt, _ = tree_inputs(cfg, trees, S_ref)
+    t_ref, l_ref = timed_loss_grad(cfg, params, bt, iters=2)
+    l_ref = float(l_ref) * len(trees)       # mean-over-trees → sum
+    emit("packed_partition", t_part * 1e6,
+         f"whole_tree_ratio={t_part / t_ref:.2f}x "
+         f"parts={info['num_partitions']} waves={info['num_waves']} "
+         f"rows={info['rows']} cap={C} unique={uniq} "
+         f"padded={info['tokens']} "
+         f"loss_rel={abs(l_p - l_ref) / abs(l_ref):.1e}")
+    assert info["unique_tokens"] == uniq
+
+
+# ---------------------------------------------------------------------------
 # --smoke — tiny model fwd+bwd through the packed tree loss (CI gate)
 # ---------------------------------------------------------------------------
 
@@ -318,6 +368,7 @@ def main(argv=None) -> None:
         bench_kernel_fwd_bwd(smoke=True)
         bench_smoke_model(args.impl)
         bench_kernel_blocks()
+        bench_packed_partition(smoke=True)
     else:
         bench_por_sweep(args.impl)
         bench_partition_tokens()
@@ -326,6 +377,7 @@ def main(argv=None) -> None:
         bench_memory_overhead()
         bench_kernel_blocks()
         bench_kernel_fwd_bwd()
+        bench_packed_partition()
     if args.out:
         artifact = {
             "smoke": args.smoke,

@@ -12,6 +12,13 @@ closures along one root-to-leaf partition path (the paper's memory
 bound).  Gateway cotangents are accumulated in float32 before the parent
 vjp call (App. B.5's accumulator, the natural JAX idiom).
 
+Two drivers share the plumbing:
+  ``partitioned_value_and_grad``        one tree, depth-first B=1
+                                        recursion (strict path bound);
+  ``packed_partitioned_value_and_grad`` many trees, wave-scheduled
+                                        batched rows (the training
+                                        pipeline, paper §3.4).
+
 The gateway is *ancestor-compacted*: we gather exactly the ancestor-token
 rows host-side instead of slicing ``[:past_len+e]`` + a −∞ bias
 (App. B.3) — smaller tensors, no bias mask.  Ancestor RoPE positions
@@ -26,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.packing import pack_partition_waves
 from repro.core.partition import TreePartition, partition_tree
 from repro.core.tree import TrajectoryTree
 from repro.models.layers import prev_powers
@@ -69,10 +77,10 @@ def make_capspecs(cfg: ModelConfig, part: TreePartition) -> dict:
     taps = max(1, max_conv_taps(cfg))
     specs = {}
     for i, c in enumerate(part.cuts):
-        idx = c.path_token_idx
+        idx = np.asarray(c.path_token_idx, np.int32)
         specs[f"c{i}"] = {
             "path_idx": idx,
-            "cut_chunk": c.cut_chunk,
+            "cut_chunk": np.int32(max(c.cut_chunk, 0)),
             "conv_pos": idx[-taps:],
             "shift_pos": idx[-1:],
         }
@@ -207,48 +215,40 @@ def route_child_cot(cfg: ModelConfig, gw_in: Optional[dict], caps: dict,
 #
 # jax.vjp re-traces on every call; across training steps (and across
 # same-shaped partitions) that tracing dominates host time.  We instead
-# cache two jitted callables per (cfg, capture-plan, gw-structure)
+# cache two jitted callables per (cfg, cut-name structure, gw-structure)
 # signature:
-#   fwd(params, batch, gw)            → ((loss, caps), metrics)
-#   bwd(params, batch, gw, cots)      → (g_params, g_gw)   [rematerialized]
-# The backward *recomputes* the partition forward inside jit (activation
-# remat) — so no residuals are held between the two phases at all, which
-# strictly improves on the paper's peak-memory bound at ~1/3 extra FLOPs
-# (standard remat trade-off), and lets XLA cache the executable.
+#   fwd(params, batch, gw, capspecs)       → ((loss, caps), metrics)
+#   bwd(params, batch, gw, capspecs, cot)  → (g_params, g_gw) [rematerialized]
+# Capture plans travel as *runtime* index arrays (dynamic gathers), not
+# static constants, so partitions that merely differ in where their cuts
+# sit reuse one executable — only the array *shapes* (bucketed by the wave
+# scheduler below) key the jit cache.  The backward *recomputes* the
+# partition forward inside jit (activation remat) — so no residuals are
+# held between the two phases at all, which strictly improves on the
+# paper's peak-memory bound at ~1/3 extra FLOPs (standard remat
+# trade-off), and lets XLA cache the executable.
 # ---------------------------------------------------------------------------
-
-def _capspec_sig(capspecs: dict):
-    return tuple(sorted(
-        (n, tuple(map(int, s["path_idx"])), int(s["cut_chunk"]),
-         tuple(map(int, s["conv_pos"])), tuple(map(int, s["shift_pos"])))
-        for n, s in capspecs.items()))
-
-
-def _capspecs_from_sig(sig) -> dict:
-    return {n: {"path_idx": np.asarray(p, np.int32), "cut_chunk": c,
-                "conv_pos": np.asarray(cv, np.int32),
-                "shift_pos": np.asarray(sh, np.int32)}
-            for n, p, c, cv, sh in sig}
-
 
 from functools import lru_cache  # noqa: E402
 
 
-@lru_cache(maxsize=512)
-def _part_fns(cfg: ModelConfig, sig, impl: str, has_gw: bool):
-    capspecs = _capspecs_from_sig(sig)
+def _names_sig(capspecs: dict) -> tuple:
+    return tuple(sorted(capspecs))
 
+
+@lru_cache(maxsize=64)
+def _part_fns(cfg: ModelConfig, names: tuple, impl: str, has_gw: bool):
     if has_gw:
-        def fwd(params, batch, gw):
+        def fwd(params, batch, gw, capspecs):
             return partition_loss(cfg, params, batch, gw, capspecs, impl)
 
-        def bwd(params, batch, gw, cot):
+        def bwd(params, batch, gw, capspecs, cot):
             return _vjp2(cfg, params, batch, gw, capspecs, impl, cot)
     else:
-        def fwd(params, batch, gw):
+        def fwd(params, batch, gw, capspecs):
             return partition_loss(cfg, params, batch, None, capspecs, impl)
 
-        def bwd(params, batch, gw, cot):
+        def bwd(params, batch, gw, capspecs, cot):
             return _vjp1(cfg, params, batch, capspecs, impl, cot)
 
     return jax.jit(fwd), jax.jit(bwd)
@@ -291,7 +291,9 @@ def partitioned_value_and_grad(
                            loss_mode=loss_mode)
     grads_acc = jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32),
                              params)
-    total_loss = 0.0
+    # loss accumulates as a device array; float() once after the recursion
+    # so partition dispatch pipelines instead of host-syncing per partition
+    total_loss = jnp.zeros((), jnp.float32)
     info = {"num_partitions": len(parts),
             "tokens": sum(p.ser.n for p in parts)}
 
@@ -300,11 +302,11 @@ def partitioned_value_and_grad(
         part = parts[pid]
         batch = make_part_batch(cfg, part, chunk_size, anc_pos)
         capspecs = make_capspecs(cfg, part)
-        fwd, bwd = _part_fns(cfg, _capspec_sig(capspecs), impl,
+        fwd, bwd = _part_fns(cfg, _names_sig(capspecs), impl,
                              gw_in is not None)
 
-        (loss, caps), _metrics = fwd(params, batch, gw_in)
-        total_loss += float(loss)
+        (loss, caps), _metrics = fwd(params, batch, gw_in, capspecs)
+        total_loss = total_loss + loss.astype(jnp.float32)
 
         cot_gw_acc = None if gw_in is None else jax.tree.map(
             lambda a: jnp.zeros(a.shape, jnp.float32), gw_in)
@@ -319,7 +321,7 @@ def partitioned_value_and_grad(
             cot_gw_acc = route_child_cot(cfg, gw_in, caps, cut_name,
                                          cot_child, cot_gw_acc, cot_caps)
 
-        g_params, g_gw = bwd(params, batch, gw_in,
+        g_params, g_gw = bwd(params, batch, gw_in, capspecs,
                              (jnp.ones((), loss.dtype), cot_caps))
         grads_acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
                                  grads_acc, g_params)
@@ -331,4 +333,399 @@ def partitioned_value_and_grad(
             g_gw, cot_gw_acc)
 
     process(0, None, np.zeros((0,), np.int32))
-    return total_loss, grads_acc, info
+    return float(total_loss), grads_acc, info
+
+
+# ---------------------------------------------------------------------------
+# Batched wave-scheduled driver (Tree Packing over partitions, §3.3–3.4)
+#
+# The recursive driver above runs one partition at a time (B=1).  Training
+# needs the transpose: MANY trees' partitions per step, batched.  The wave
+# scheduler packs every partition of every tree into per-wave [B, S] rows
+# (core/packing.pack_partition_waves) and runs
+#
+#   forward  waves 0..W−1: each wave is ONE jitted call; a child's gateway
+#            is assembled per row from its parent's captures (the parent is
+#            always in the previous wave);
+#   backward waves W−1..0: children's gateway cotangents are routed to
+#            their parents' capture cotangents per row, then the wave's
+#            remat backward runs as one jitted call.
+#
+# Rows in a wave have different ancestor depths and cut plans, so gateway
+# tensors are front-padded to a shared (bucketed) ancestor length — padded
+# slots are masked invisible (attention anc_valid; conv front-zeros are
+# exactly the out-of-range-reads-zero semantics) — and capture plans are
+# front-padded index arrays whose padded entries are trimmed host-side
+# before any use.  Shape buckets (powers of two for B, ancestor length,
+# cut count, path length) keep the jit cache small across steps.
+#
+# Memory: unlike the depth-first recursion (peak = one root-to-leaf
+# partition path), wave scheduling keeps each wave's gateway inputs and
+# captures resident between the two sweeps — the usual
+# throughput-for-memory trade of pipelined schedules; each wave's
+# *activations* are still rematerialized inside the jitted backward.
+# ---------------------------------------------------------------------------
+
+
+def _pow2(n: int, lo: int = 1) -> int:
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+def _pad_rows(a: np.ndarray, Bb: int, fill) -> np.ndarray:
+    if a.shape[0] == Bb:
+        return a
+    pad = np.full((Bb - a.shape[0],) + a.shape[1:], fill, a.dtype)
+    return np.concatenate([a, pad], axis=0)
+
+
+def _pad_tok(a: jax.Array, T: int) -> jax.Array:
+    """Front-pad the token axis (2) with zeros to length T."""
+    t = a.shape[2]
+    if t >= T:
+        return a[:, :, -T:]
+    z = jnp.zeros(a.shape[:2] + (T - t,) + a.shape[3:], a.dtype)
+    return jnp.concatenate([z, a], axis=2)
+
+
+def _slice_gw_row(gw: dict, r: int, A_real: int) -> dict:
+    """Row r of a stacked wave gateway, stripped of front padding."""
+    def attn_sl(a):
+        return a[:, r:r + 1, a.shape[2] - A_real:]
+
+    out = {}
+    for gkey, g in gw.items():
+        h = {}
+        for kind, sub in g.items():
+            if kind == "attn":
+                h[kind] = {t: attn_sl(sub[t]) for t in ("k", "v")}
+            else:
+                h[kind] = jax.tree.map(lambda a: a[:, r:r + 1], sub)
+        out[gkey] = h
+    return out
+
+
+def _stack_gw_rows(rows: list[dict], A_max: int, Bb: int) -> dict:
+    """Stack per-row (B=1) gateways along the row axis, front-padding
+    token axes (attention ancestors to A_max; conv/shift tails to their
+    wave max) and adding zero rows up to Bb."""
+    def catB(xs):
+        x = jnp.concatenate(xs, axis=1)
+        if Bb > len(xs):
+            z = jnp.zeros((x.shape[0], Bb - len(xs)) + x.shape[2:],
+                          x.dtype)
+            x = jnp.concatenate([x, z], axis=1)
+        return x
+
+    out: dict = {}
+    for gkey in rows[0]:
+        g: dict = {}
+        for kind in rows[0][gkey]:
+            sub: dict = {}
+            for leaf in rows[0][gkey][kind]:
+                vals = [r[gkey][kind][leaf] for r in rows]
+                if kind == "attn" or leaf in ("conv", "shift"):
+                    T = A_max if kind == "attn" else \
+                        max(v.shape[2] for v in vals)
+                    sub[leaf] = catB([_pad_tok(v, T) for v in vals])
+                else:       # "state": nested pytree, no token axis
+                    sub[leaf] = jax.tree.map(
+                        lambda *xs: catB(list(xs)), *vals)
+            g[kind] = sub
+        out[gkey] = g
+    return out
+
+
+def _wave_capspecs(cfg: ModelConfig, cuts: list, taps: int) -> dict:
+    """Bucketed, front-padded capture plans for one wave (runtime arrays).
+
+    Padded entries index position 0; their captures are trimmed before any
+    use and receive zero cotangents, so they are inert."""
+    if not cuts:
+        return {}
+    plen_b = _pow2(max(len(c.path_idx) for c in cuts))
+    ncut_b = _pow2(len(cuts))
+    specs = {}
+    for i in range(ncut_b):
+        if i < len(cuts):
+            idx = np.asarray(cuts[i].path_idx, np.int32)
+            pad = np.concatenate(
+                [np.zeros(plen_b - len(idx), np.int32), idx])
+            cc = np.int32(max(cuts[i].cut_chunk, 0))
+        else:
+            pad = np.zeros(plen_b, np.int32)
+            cc = np.int32(0)
+        specs[f"c{i}"] = {"path_idx": pad, "cut_chunk": cc,
+                          "conv_pos": pad[-taps:], "shift_pos": pad[-1:]}
+    return specs
+
+
+def _cut_caps_view(cfg: ModelConfig, caps: dict, cname: str, r: int,
+                   true_len: int) -> dict:
+    """Row r's capture for one cut, trimmed to its real (unpadded) token
+    entries — the exact tensors a child partition's gateway glues in."""
+    taps = max(1, max_conv_taps(cfg))
+    creal = min(taps, true_len)
+    out: dict = {}
+    for gkey, g in caps.items():
+        h: dict = {}
+        for kind, cuts_d in g.items():
+            if cname not in cuts_d:
+                continue
+            c = cuts_d[cname]
+            if kind == "attn":
+                h[kind] = {cname: {
+                    t: c[t][:, r:r + 1, c[t].shape[2] - true_len:]
+                    for t in ("k", "v")}}
+            elif kind == "ssm":
+                h[kind] = {cname: {
+                    "state": jax.tree.map(lambda a: a[:, r:r + 1],
+                                          c["state"]),
+                    "conv": c["conv"][:, r:r + 1,
+                                      c["conv"].shape[2] - creal:]}}
+            elif kind == "tm":
+                h[kind] = {cname: {
+                    "state": jax.tree.map(lambda a: a[:, r:r + 1],
+                                          c["state"]),
+                    "shift": c["shift"][:, r:r + 1]}}
+            elif kind == "cm":
+                h[kind] = {cname: {"shift": c["shift"][:, r:r + 1]}}
+        if h:
+            out[gkey] = h
+    return out
+
+
+def _embed_cut_cot(cot_caps: dict, cot_view: dict, cname: str, r: int
+                   ) -> None:
+    """Scatter a trimmed per-cut cotangent (mirror of _cut_caps_view) back
+    into the wave-level capture cotangent, in place."""
+    def emb_tok(full, part):
+        t = part.shape[2]
+        return full.at[:, r, full.shape[2] - t:].add(
+            part[:, 0].astype(full.dtype))
+
+    def emb_row(full, part):
+        return full.at[:, r].add(part[:, 0].astype(full.dtype))
+
+    for gkey, g in cot_view.items():
+        for kind, cuts_d in g.items():
+            c = cuts_d[cname]
+            tgt = cot_caps[gkey][kind][cname]
+            if kind == "attn":
+                for t in ("k", "v"):
+                    tgt[t] = emb_tok(tgt[t], c[t])
+            else:
+                if "state" in c:
+                    tgt["state"] = jax.tree.map(emb_row, tgt["state"],
+                                                c["state"])
+                for leaf in ("conv", "shift"):
+                    if leaf in c:
+                        tgt[leaf] = emb_tok(tgt[leaf], c[leaf])
+
+
+def packed_partitioned_value_and_grad(
+    cfg: ModelConfig,
+    params: dict,
+    trees: list[TrajectoryTree],
+    capacity: int,
+    *,
+    seq_len: Optional[int] = None,
+    impl: str = "ref",
+    loss_mode: str = "sep_avg",
+    max_rows: Optional[int] = None,
+) -> tuple[float, dict, dict]:
+    """Loss-*sum* + grads for MANY trees via wave-scheduled Tree Packing
+    over partitions — the batched training-pipeline form of
+    ``partitioned_value_and_grad``.  Every token of every tree is computed
+    exactly once, with ≤ ``seq_len`` tokens per row and one jitted
+    fwd / one jitted bwd call per wave.  ``max_rows`` caps every wave's
+    row count (too-wide waves split), bounding per-wave activation
+    residency to a ``max_rows × seq_len`` step like the packed path's
+    row budget.
+
+    Returns ``(loss_sum, grads (float32), info)``; divide by the number of
+    trees to match ``loss_and_metrics``'s mean-over-trees normalizer."""
+    chunk_size = cfg.ssm.chunk_size if needs_chunks(cfg) else None
+    seq_len = capacity if seq_len is None else seq_len
+    assert capacity <= seq_len, (capacity, seq_len)
+    taps = max(1, max_conv_taps(cfg))
+    grads_acc = jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32),
+                             params)
+    info: dict[str, Any] = {"num_trees": len(trees)}
+    if not trees:
+        return 0.0, grads_acc, info
+
+    forest = [partition_tree(t, capacity, chunk_size=chunk_size,
+                             loss_mode=loss_mode) for t in trees]
+    waves = pack_partition_waves(forest, seq_len, chunk_size=chunk_size,
+                                 max_rows=max_rows)
+    cut_of_child: dict[tuple[int, int], tuple[int, int]] = {}
+    for w, wv in enumerate(waves):
+        for ci, c in enumerate(wv.cuts):
+            cut_of_child[(c.tree, c.child_pid)] = (w, ci)
+
+    info.update(num_partitions=sum(len(p) for p in forest),
+                num_waves=len(waves),
+                rows=sum(wv.num_rows for wv in waves),
+                max_wave_rows=max(wv.num_rows for wv in waves),
+                tokens=sum(p.ser.n for ps in forest for p in ps),
+                unique_tokens=sum(int(p.ser.valid.sum())
+                                  for ps in forest for p in ps))
+
+    # ---- forward sweep, wave order ---------------------------------------
+    st: list[dict] = []
+    total_loss = jnp.zeros((), jnp.float32)
+    for w, wv in enumerate(waves):
+        B, Bb = wv.num_rows, _pow2(wv.num_rows)
+        a = wv.arrays
+        prev_np = _pad_rows(a["prev_idx"], Bb, -1)
+        batch = {
+            "tokens": jnp.asarray(_pad_rows(a["tokens"], Bb, 0)),
+            "pos_ids": jnp.asarray(_pad_rows(a["pos_ids"], Bb, 0)),
+            "kv_last": jnp.asarray(_pad_rows(a["kv_last"], Bb, -1)),
+            "weight": jnp.asarray(_pad_rows(a["weight"], Bb, 0)),
+            "prev_idx": jnp.asarray(prev_np),
+            "valid": jnp.asarray(_pad_rows(a["valid"], Bb, False)),
+        }
+        if chunk_size is not None:
+            batch["chunk_parent"] = jnp.asarray(
+                _pad_rows(a["chunk_parent"], Bb, -1))
+            batch["prev_pows"] = jnp.asarray(prev_powers(prev_np, taps))
+        if wv.cuts:
+            Eb = _pow2(max(sum(1 for c in wv.cuts if c.row == r)
+                           for r in range(B)))
+            pos = np.zeros((Bb, Eb), np.int32)
+            lab = np.zeros((Bb, Eb), np.int32)
+            wgt = np.zeros((Bb, Eb), np.float32)
+            cnt = [0] * B
+            for c in wv.cuts:
+                j = cnt[c.row]
+                cnt[c.row] += 1
+                pos[c.row, j] = c.boundary_pos
+                lab[c.row, j] = c.boundary_label
+                wgt[c.row, j] = c.boundary_weight
+            batch["extra_pos"] = jnp.asarray(pos)
+            batch["extra_label"] = jnp.asarray(lab)
+            batch["extra_weight"] = jnp.asarray(wgt)
+        capspecs = _wave_capspecs(cfg, wv.cuts, taps)
+
+        gw = None
+        A_real: list[int] = []
+        anc_pos_rows: list[np.ndarray] = \
+            [np.zeros((0,), np.int32) for _ in range(B)]
+        # waves are depth-homogeneous: either all root fragments (no
+        # gateway) or all gateway-bearing; parents may sit several waves
+        # back once a too-wide depth level is split under max_rows
+        has_gw = forest[wv.slots[0].tree][wv.slots[0].pid].parent_pid >= 0
+        if has_gw:
+            rows_gw = []
+            anc_pos_rows = []
+            for sl in wv.slots:
+                wp, ci = cut_of_child[(sl.tree, sl.pid)]
+                stp, c = st[wp], waves[wp].cuts[ci]
+                cname = f"c{ci}"
+                p_gw_row = None if stp["gw"] is None else _slice_gw_row(
+                    stp["gw"], c.row, stp["A_real"][c.row])
+                caps_view = _cut_caps_view(cfg, stp["caps"], cname,
+                                           c.row, len(c.path_idx))
+                rows_gw.append(
+                    assemble_child_gw(cfg, p_gw_row, caps_view, cname))
+                anc_pos_rows.append(np.concatenate(
+                    [stp["anc_pos"][c.row],
+                     waves[wp].arrays["pos_ids"][c.row, c.path_idx]]
+                ).astype(np.int32))
+                assert len(anc_pos_rows[-1]) == \
+                    forest[sl.tree][sl.pid].anc_len
+            A_real = [len(p) for p in anc_pos_rows]
+            A_max = _pow2(max(A_real))
+            gw = _stack_gw_rows(rows_gw, A_max, Bb)
+            anc_pos = np.zeros((Bb, A_max), np.int32)
+            anc_valid = np.zeros((Bb, A_max), bool)
+            for r, p in enumerate(anc_pos_rows):
+                anc_pos[r, A_max - len(p):] = p
+                anc_valid[r, A_max - len(p):] = True
+            batch["anc_pos"] = jnp.asarray(anc_pos)
+            batch["anc_valid"] = jnp.asarray(anc_valid)
+
+        fwd, _ = _part_fns(cfg, _names_sig(capspecs), impl, has_gw)
+        (loss, caps), _metrics = fwd(params, batch, gw, capspecs)
+        total_loss = total_loss + loss.astype(jnp.float32)
+        st.append(dict(batch=batch, gw=gw, capspecs=capspecs, caps=caps,
+                       A_real=A_real, anc_pos=anc_pos_rows,
+                       has_gw=has_gw, cot_gw=None, cot_cut={}))
+
+    # ---- backward sweep, reverse wave order ------------------------------
+    for w in reversed(range(len(waves))):
+        s, wv = st[w], waves[w]
+        cot_caps = jax.tree.map(jnp.zeros_like, s["caps"])
+        for cname, (r, cot_view) in s["cot_cut"].items():
+            _embed_cut_cot(cot_caps, cot_view, cname, r)
+        _, bwd = _part_fns(cfg, _names_sig(s["capspecs"]), impl,
+                           s["has_gw"])
+        g_params, g_gw = bwd(params, s["batch"], s["gw"], s["capspecs"],
+                             (jnp.ones((), jnp.float32), cot_caps))
+        grads_acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                                 grads_acc, g_params)
+        if not s["has_gw"]:
+            continue
+        if s["cot_gw"] is not None:
+            g_gw = jax.tree.map(
+                lambda a, b: a.astype(jnp.float32) + b, g_gw, s["cot_gw"])
+        for sl in wv.slots:
+            wp, ci = cut_of_child[(sl.tree, sl.pid)]
+            stp, c = st[wp], waves[wp].cuts[ci]
+            cname = f"c{ci}"
+            cot_child_row = _slice_gw_row(g_gw, sl.row,
+                                          s["A_real"][sl.row])
+            p_gw_row = None if stp["gw"] is None else _slice_gw_row(
+                stp["gw"], c.row, stp["A_real"][c.row])
+            caps_view = _cut_caps_view(cfg, stp["caps"], cname, c.row,
+                                       len(c.path_idx))
+            cot_gw_row = None if p_gw_row is None else jax.tree.map(
+                lambda a: jnp.zeros(a.shape, jnp.float32), p_gw_row)
+            cot_caps_row = jax.tree.map(jnp.zeros_like, caps_view)
+            route_child_cot(cfg, p_gw_row, caps_view, cname,
+                            cot_child_row, cot_gw_row, cot_caps_row)
+            if cot_gw_row is not None:
+                if stp["cot_gw"] is None:
+                    stp["cot_gw"] = jax.tree.map(
+                        lambda a: jnp.zeros(a.shape, jnp.float32),
+                        stp["gw"])
+                stp["cot_gw"] = _embed_gw_row_cot(stp["cot_gw"],
+                                                  cot_gw_row, c.row)
+            stp["cot_cut"][cname] = (c.row, cot_caps_row)
+
+    return float(total_loss), grads_acc, info
+
+
+def _embed_gw_row_cot(acc: dict, row_cot: dict, r: int) -> dict:
+    """Add a per-row gateway cotangent (stripped shapes) into the stacked
+    wave accumulator at row r (front-padded axes)."""
+    out: dict = {}
+    for gkey, g in acc.items():
+        h: dict = {}
+        for kind, sub in g.items():
+            src = row_cot[gkey][kind]
+            if kind == "attn":
+                h[kind] = {t: sub[t].at[:, r, sub[t].shape[2]
+                                        - src[t].shape[2]:].add(
+                    src[t][:, 0].astype(sub[t].dtype))
+                    for t in ("k", "v")}
+            else:
+                hh: dict = {}
+                for leaf in sub:
+                    if leaf in ("conv", "shift"):
+                        hh[leaf] = sub[leaf].at[
+                            :, r, sub[leaf].shape[2]
+                            - src[leaf].shape[2]:].add(
+                            src[leaf][:, 0].astype(sub[leaf].dtype))
+                    else:
+                        hh[leaf] = jax.tree.map(
+                            lambda a, b: a.at[:, r].add(
+                                b[:, 0].astype(a.dtype)),
+                            sub[leaf], src[leaf])
+                h[kind] = hh
+        out[gkey] = h
+    return out

@@ -11,12 +11,21 @@ fed to the jitted model (and sharded over the data axes).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Optional, Sequence
 
 import numpy as np
 
 from .tree import SerializedTree
+from .partition import TreePartition
+
+
+class DoesNotFitError(ValueError):
+    """An item (tree / path / row set) exceeds the fixed packing budget.
+
+    Raised explicitly so callers can distinguish "this tree is too big for
+    the row" (recoverable: partition it or drop it) from genuine packer
+    bugs, which should propagate."""
 
 
 @dataclass
@@ -32,6 +41,7 @@ class TreeBatch:
     chunk_parent: Optional[np.ndarray] = None  # i32 [B, C] (−1 = init state)
     num_trees: int = 1        # loss normalizer (mean over trees)
     extra_embeds: Optional[np.ndarray] = None  # f32 [B, T_src, D] frontend stub
+    row_trees: Optional[np.ndarray] = None     # i32 [B] trees per row
 
     @property
     def shape(self) -> tuple[int, int]:
@@ -39,10 +49,16 @@ class TreeBatch:
 
     def row_slice(self, b: int) -> "TreeBatch":
         sl = lambda a: None if a is None else a[b:b + 1]
+        if self.row_trees is not None:
+            n = int(self.row_trees[b])
+        else:
+            # a tree root is the only valid token with no path predecessor
+            n = int(((self.prev_idx[b] == -1) & self.valid[b]).sum())
         return TreeBatch(self.tokens[b:b + 1], self.pos_ids[b:b + 1],
                          self.kv_last[b:b + 1], self.weight[b:b + 1],
                          self.prev_idx[b:b + 1], self.valid[b:b + 1],
-                         sl(self.chunk_parent), 1, sl(self.extra_embeds))
+                         sl(self.chunk_parent), max(n, 1),
+                         sl(self.extra_embeds), sl(self.row_trees))
 
 
 def _empty_row(S: int) -> dict[str, np.ndarray]:
@@ -75,7 +91,7 @@ def pack_trees(
     for i in order:
         n = trees[i].n
         if n > seq_len:
-            raise ValueError(
+            raise DoesNotFitError(
                 f"tree of {n} tokens does not fit row of {seq_len}; "
                 "partition it first (core/partition.py)")
         for r, used in enumerate(row_used):
@@ -89,7 +105,8 @@ def pack_trees(
 
     if batch_size is not None:
         if len(rows) > batch_size:
-            raise ValueError(f"{len(rows)} rows > batch_size {batch_size}")
+            raise DoesNotFitError(
+                f"{len(rows)} rows > batch_size {batch_size}")
         while len(rows) < batch_size:
             rows.append([])
 
@@ -134,6 +151,7 @@ def pack_trees(
         valid=np.stack(cols["valid"]),
         chunk_parent=np.stack(chunk_rows) if chunk_rows else None,
         num_trees=len(trees),
+        row_trees=np.asarray([len(r) for r in rows], np.int32),
     )
 
 
@@ -151,12 +169,13 @@ def pack_linear_paths(
     sep-avg — directly comparable with the tree-packed loss.
     """
     flat: list[dict[str, np.ndarray]] = []
-    for paths in trees_paths:
+    for ti, paths in enumerate(trees_paths):
         K = len(paths)
         for p in paths:
             q = dict(p)
             q["_w"] = np.where(p["trained"], p["advantage"] / K,
                                0.0).astype(np.float32)
+            q["_tree"] = ti
             flat.append(q)
 
     def aligned_len(n: int) -> int:
@@ -170,7 +189,7 @@ def pack_linear_paths(
     for i in order:
         n = aligned_len(len(flat[i]["tokens"]))
         if n > seq_len:
-            raise ValueError("path longer than row")
+            raise DoesNotFitError("path longer than row")
         for r, used in enumerate(row_used):
             if used + n <= seq_len:
                 rows[r].append(i)
@@ -181,7 +200,8 @@ def pack_linear_paths(
             row_used.append(n)
     if batch_size is not None:
         if len(rows) > batch_size:
-            raise ValueError(f"{len(rows)} rows > batch_size {batch_size}")
+            raise DoesNotFitError(
+                f"{len(rows)} rows > batch_size {batch_size}")
         while len(rows) < batch_size:
             rows.append([])
 
@@ -226,4 +246,172 @@ def pack_linear_paths(
         valid=np.stack(out["valid"]),
         chunk_parent=np.stack(chunk_rows) if chunk_rows else None,
         num_trees=len(trees_paths),
+        row_trees=np.asarray(
+            [len({flat[i]["_tree"] for i in r}) for r in rows], np.int32),
     )
+
+
+# ---------------------------------------------------------------------------
+# Tree Packing over partitions (paper §3.3–3.4): pack the partition
+# serializations of MANY trees into fixed-shape [B, S] rows, grouped by
+# topological wave so every partition's parent lands in a strictly earlier
+# wave (its gateway captures exist before the child runs).  Waves follow
+# depth order in the partition tree; a depth level wider than ``max_rows``
+# splits into several consecutive waves, all still after their parents'.
+#
+# Row discipline: wave-0 fragments carry no gateway, so any number can
+# share a row (kv_last separates them, as with whole trees).  Wave ≥1
+# fragments each own a row — their ancestor KV (extra_kv) is row-global.
+# ---------------------------------------------------------------------------
+
+@dataclass
+class PackedPartition:
+    """Placement of one partition fragment inside a wave batch."""
+    tree: int                  # index into the forest's tree list
+    pid: int                   # partition id within that tree
+    row: int
+    offset: int                # token offset inside the row
+
+
+@dataclass
+class PackedCut:
+    """One cut of a placed partition, with row-absolute indices."""
+    tree: int
+    pid: int                   # parent partition (lives in this wave)
+    child_pid: int
+    row: int                   # parent's row
+    path_idx: np.ndarray       # i32, absolute positions in the parent row
+    cut_chunk: int             # absolute chunk index in the parent row
+    boundary_pos: int          # absolute position of the predicting token
+    boundary_label: int
+    boundary_weight: float
+
+
+@dataclass
+class PackedWave:
+    """One topological wave: fixed-shape rows + placement metadata."""
+    arrays: dict[str, np.ndarray]          # [B, S] serialization columns
+    slots: list[PackedPartition] = field(default_factory=list)
+    cuts: list[PackedCut] = field(default_factory=list)
+
+    @property
+    def num_rows(self) -> int:
+        return self.arrays["tokens"].shape[0]
+
+
+def pack_partition_waves(
+    forest: Sequence[Sequence[TreePartition]],
+    seq_len: int,
+    *,
+    chunk_size: Optional[int] = None,
+    max_rows: Optional[int] = None,
+) -> list[PackedWave]:
+    """Pack every partition of every tree into per-wave [B, S] rows.
+
+    forest[t] is ``partition_tree(trees[t], capacity, ...)`` with
+    capacity ≤ seq_len.  Returns waves in topological order; root waves'
+    rows may hold several fragments, gateway-bearing waves one fragment
+    per row.  ``max_rows`` bounds every wave's row count (same-depth
+    fragments are independent, so a too-wide wave splits into several
+    consecutive waves) — the partitioned path then never exceeds the
+    activation footprint of a ``max_rows × seq_len`` packed step."""
+    # wave index per partition (parent wave + 1; parents precede children)
+    waves: list[list[tuple[int, int]]] = []
+    for t, parts in enumerate(forest):
+        wv: dict[int, int] = {}
+        for p in parts:
+            w = 0 if p.parent_pid < 0 else wv[p.parent_pid] + 1
+            wv[p.pid] = w
+            while len(waves) <= w:
+                waves.append([])
+            waves[w].append((t, p.pid))
+
+    def materialize(placements: list[PackedPartition], B: int
+                    ) -> PackedWave:
+        S = seq_len
+        C = None if chunk_size is None else S // chunk_size
+        cols = {k: np.stack([_empty_row(S)[k] for _ in range(B)])
+                for k in ("tokens", "pos_ids", "kv_last", "weight",
+                          "prev_idx", "valid")}
+        cp = None if C is None else np.full((B, C), -1, np.int32)
+        cuts: list[PackedCut] = []
+        for pl in placements:
+            ser = forest[pl.tree][pl.pid].ser
+            off = pl.offset
+            sl = slice(off, off + ser.n)
+            cols["tokens"][pl.row, sl] = ser.tokens
+            cols["pos_ids"][pl.row, sl] = ser.pos_ids
+            cols["kv_last"][pl.row, sl] = np.where(
+                ser.kv_last < 0, -1, ser.kv_last + off)
+            cols["weight"][pl.row, sl] = ser.weight
+            # negative prev slots (−1 none, −2.. gateway) are offset-free
+            cols["prev_idx"][pl.row, sl] = np.where(
+                ser.prev_idx < 0, ser.prev_idx, ser.prev_idx + off)
+            cols["valid"][pl.row, sl] = ser.valid
+            if C is not None:
+                assert off % chunk_size == 0 and ser.n % chunk_size == 0, \
+                    "SSM wave packing requires chunk-aligned partitions"
+                pc = ser.chunk_parent_map(chunk_size)
+                coff = off // chunk_size
+                cp[pl.row, coff:coff + len(pc)] = np.where(
+                    pc < 0, pc, pc + coff)
+            for c in forest[pl.tree][pl.pid].cuts:
+                coff = 0 if chunk_size is None else off // chunk_size
+                cuts.append(PackedCut(
+                    tree=pl.tree, pid=pl.pid, child_pid=c.child_pid,
+                    row=pl.row,
+                    path_idx=c.path_token_idx + off,
+                    cut_chunk=(-1 if c.cut_chunk < 0
+                               else c.cut_chunk + coff),
+                    boundary_pos=c.boundary_pos + off,
+                    boundary_label=c.boundary_label,
+                    boundary_weight=c.boundary_weight))
+        arrays = dict(cols)
+        if cp is not None:
+            arrays["chunk_parent"] = cp
+        return PackedWave(arrays=arrays, slots=placements, cuts=cuts)
+
+    out: list[PackedWave] = []
+    for w, members in enumerate(waves):
+        # --- row assignment -------------------------------------------------
+        placements: list[PackedPartition] = []
+        if w == 0:
+            order = sorted(members,
+                           key=lambda m: -forest[m[0]][m[1]].ser.n)
+            row_used: list[int] = []
+            for t, pid in order:
+                n = forest[t][pid].ser.n
+                if n > seq_len:
+                    raise DoesNotFitError(
+                        f"partition of {n} tokens > row of {seq_len}; "
+                        "lower the partition capacity")
+                for r, used in enumerate(row_used):
+                    if used + n <= seq_len:
+                        placements.append(PackedPartition(t, pid, r, used))
+                        row_used[r] += n
+                        break
+                else:
+                    placements.append(PackedPartition(t, pid,
+                                                      len(row_used), 0))
+                    row_used.append(n)
+            B = len(row_used)
+        else:
+            for r, (t, pid) in enumerate(members):
+                if forest[t][pid].ser.n > seq_len:
+                    raise DoesNotFitError(
+                        f"partition of {forest[t][pid].ser.n} tokens > row "
+                        f"of {seq_len}; lower the partition capacity")
+                placements.append(PackedPartition(t, pid, r, 0))
+            B = len(members)
+
+        # --- materialize rows (splitting too-wide waves) --------------------
+        if max_rows is not None and B > max_rows:
+            for base in range(0, B, max_rows):
+                chunk = [PackedPartition(p.tree, p.pid, p.row - base,
+                                         p.offset)
+                         for p in placements
+                         if base <= p.row < base + max_rows]
+                out.append(materialize(chunk, min(max_rows, B - base)))
+        else:
+            out.append(materialize(placements, B))
+    return out

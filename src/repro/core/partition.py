@@ -237,13 +237,24 @@ def partition_token_counts(parts: list[TreePartition]) -> dict:
                 padded_tokens=with_pad)
 
 
-def standard_partition_token_counts(tree: TrajectoryTree, capacity: int
-                                    ) -> int:
+def standard_partition_token_counts(
+    tree: TrajectoryTree,
+    capacity: int,
+    *,
+    chunk_size: Optional[int] = None,
+    loss_mode: str = "sep_avg",
+) -> int:
     """Token count of *standard* tree partitioning (no differentiable
     boundaries): each child partition re-includes all ancestor tokens
-    (recomputed) — the paper's Fig.-5 middle bar."""
-    parts = partition_tree(tree, capacity)
+    (recomputed) — the paper's Fig.-5 middle bar.
+
+    ``chunk_size``/``loss_mode`` must match the config being measured:
+    chunked (SSM) serializations pad every node segment to the chunk grid
+    and the re-included ancestor prefix pads the same way, so ignoring them
+    under-counts the standard-partitioning bar."""
+    parts = partition_tree(tree, capacity, chunk_size=chunk_size,
+                           loss_mode=loss_mode)
     total = 0
     for p in parts:
-        total += int(p.ser.valid.sum()) + p.anc_len
+        total += p.ser.n + _chunk_pad(p.anc_len, chunk_size)
     return total

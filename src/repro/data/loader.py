@@ -7,16 +7,23 @@ stays within a gradient-accumulation step and the gradient is unbiased.
 Two modes behind one iterator:
   tree mode     : DFS-serialize + pack_trees      (Tree Training)
   baseline mode : linearize paths + pack           (sep-avg baseline)
+
+With ``auto_partition`` on (tree mode), trees whose serialization exceeds
+one row are no longer dropped: they ride along each step as ``oversized``
+and train through the wave-scheduled partitioned driver
+(core/gateway.packed_partitioned_value_and_grad) — zero data loss, every
+token computed exactly once under the ``capacity`` memory cap.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Iterator, Optional, Sequence
 
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.packing import TreeBatch, pack_linear_paths, pack_trees
+from repro.core.packing import (DoesNotFitError, TreeBatch,
+                                pack_linear_paths, pack_trees)
 from repro.core.tree import TrajectoryTree, serialize_tree
 from repro.data.synthetic import trees_for_batch
 from repro.models.model import needs_chunks, prepare_batch
@@ -32,42 +39,58 @@ class LoaderConfig:
     seed: int = 0
     loss_mode: str = "sep_avg"
     gen_kwargs: Optional[dict] = None
+    auto_partition: bool = False  # route oversized trees via partitioning
+    capacity: Optional[int] = None  # partition token cap (default seq_len)
+
+
+@dataclass
+class StepBatch:
+    """One training step's data: the packed batch plus any trees routed
+    to the partitioned driver instead of being dropped."""
+    inputs: Optional[dict]              # model inputs (None: nothing packed)
+    tb: Optional[TreeBatch]
+    oversized: list[TrajectoryTree] = field(default_factory=list)
+    dropped: int = 0                    # trees lost this step
+    num_trees: int = 0                  # packed + oversized (normalizer)
 
 
 def _fit_trees(trees: Sequence[TrajectoryTree], seq_len: int,
-               chunk: Optional[int], mode: str):
-    """Drop trees whose serialization exceeds one row (the partitioned
-    driver handles those; the packed loader keeps rows full)."""
-    keep = []
+               chunk: Optional[int]):
+    """Split trees into (fits-one-row, oversized).  The filter checks BOTH
+    serializations so tree and baseline modes see the exact same dataset —
+    step-wise loss comparisons stay pure."""
+    keep, oversized = [], []
     for t in trees:
-        # filter on BOTH serializations so tree and baseline modes see the
-        # exact same dataset — step-wise loss comparisons stay pure
         n_tree = serialize_tree(t, chunk_size=chunk).n
         n_path = max(len(p["tokens"]) for p in t.linearize_paths())
         if chunk:
             n_path = ((n_path + chunk - 1) // chunk) * chunk
-        if max(n_tree, n_path) <= seq_len:
-            keep.append(t)
-    return keep
+        (keep if max(n_tree, n_path) <= seq_len else oversized).append(t)
+    return keep, oversized
 
 
-def batches(cfg: ModelConfig, lc: LoaderConfig,
-            num_batches: int) -> Iterator[tuple[dict, TreeBatch]]:
-    """Yields (model_inputs, raw TreeBatch) pairs."""
+def step_batches(cfg: ModelConfig, lc: LoaderConfig,
+                 num_batches: int) -> Iterator[StepBatch]:
+    """Full-fidelity stream: every generated tree is accounted for — it is
+    either packed, routed to the partitioned driver (``auto_partition``),
+    or counted in ``dropped``."""
     chunk = cfg.ssm.chunk_size if needs_chunks(cfg) else None
     rng = np.random.default_rng(lc.seed)
     gk = dict(vocab_size=cfg.vocab_size)
     gk.update(lc.gen_kwargs or {})
+    route = lc.auto_partition and lc.mode == "tree"
     for b in range(num_batches):
         trees = trees_for_batch(lc.seed * 100_003 + b,
                                 n_trees=lc.trees_per_batch, kind=lc.kind,
                                 **gk)
-        trees = _fit_trees(trees, lc.seq_len, chunk, lc.mode)
-        if not trees:
-            continue
-        # drop the largest trees until the pack fits the row budget
+        trees, oversized = _fit_trees(trees, lc.seq_len, chunk)
+        dropped = 0 if route else len(oversized)
+        # move the largest trees out until the pack fits the row budget;
+        # only the explicit does-not-fit error is recoverable — anything
+        # else is a packer bug and propagates
         trees = sorted(trees, key=lambda t: t.num_unique_tokens())
-        while True:
+        tb = None
+        while trees:
             try:
                 if lc.mode == "tree":
                     tb = pack_trees(
@@ -82,18 +105,35 @@ def batches(cfg: ModelConfig, lc: LoaderConfig,
                         lc.seq_len, batch_size=lc.batch_rows,
                         chunk_size=chunk)
                 break
-            except ValueError:
-                if len(trees) <= 1:
-                    tb = None
-                    break
+            except DoesNotFitError:
+                if route:
+                    oversized.append(trees[-1])
+                else:
+                    dropped += 1
                 trees = trees[:-1]
-        if tb is None:
+        if not route:
+            oversized = []
+        if tb is None and not oversized and dropped == 0:
             continue
-        extra = None
-        if cfg.frontend is not None:
-            extra = rng.normal(size=(tb.tokens.shape[0], cfg.frontend_len,
-                                     cfg.d_model)).astype(np.float32)
-        yield prepare_batch(cfg, tb, extra), tb
+        inputs = None
+        if tb is not None:
+            extra = None
+            if cfg.frontend is not None:
+                extra = rng.normal(
+                    size=(tb.tokens.shape[0], cfg.frontend_len,
+                          cfg.d_model)).astype(np.float32)
+            inputs = prepare_batch(cfg, tb, extra)
+        yield StepBatch(inputs=inputs, tb=tb, oversized=oversized,
+                        dropped=dropped,
+                        num_trees=len(trees) + len(oversized))
+
+
+def batches(cfg: ModelConfig, lc: LoaderConfig,
+            num_batches: int) -> Iterator[tuple[dict, TreeBatch]]:
+    """Yields (model_inputs, raw TreeBatch) pairs (packed stream only)."""
+    for sb in step_batches(cfg, lc, num_batches):
+        if sb.inputs is not None:
+            yield sb.inputs, sb.tb
 
 
 def dataset_por(trees: Sequence[TrajectoryTree]) -> float:

@@ -5,6 +5,10 @@ Runs tree-training (or the sep-avg baseline) on synthetic agentic trees:
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-8b --smoke \\
       --steps 50 --mode tree
 
+``--auto-partition`` routes trees larger than one row through
+Redundancy-Free Tree Partitioning (wave-scheduled, ``--capacity`` token
+cap per partition) instead of silently dropping them — zero data loss.
+
 ``--mesh host`` (default) runs on the local device(s); ``--mesh single``/
 ``multi`` builds the production mesh (requires the dry-run's fake-device
 env when not on a real pod — intended for lowering checks; real training
@@ -17,16 +21,19 @@ import json
 import time
 
 import jax
+import jax.numpy as jnp
 
 from repro import sharding as sh
 from repro.configs import get_config
-from repro.data.loader import LoaderConfig, batches
+from repro.core.gateway import packed_partitioned_value_and_grad
+from repro.data.loader import LoaderConfig, batches, step_batches
 from repro.launch.mesh import data_axes, make_host_mesh, \
     make_production_mesh
 from repro.models.model import init_params
 from repro.train.checkpoint import save_checkpoint
-from repro.train.optimizer import OptimizerConfig, init_opt_state
-from repro.train.train_step import make_train_step
+from repro.train.optimizer import OptimizerConfig, adamw_update, \
+    init_opt_state
+from repro.train.train_step import make_grad_fn, make_train_step
 
 
 def main() -> None:
@@ -42,6 +49,11 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--impl", default="ref",
                     choices=["ref", "chunked", "pallas"])
+    ap.add_argument("--auto-partition", action="store_true",
+                    help="train oversized trees via wave-scheduled "
+                         "partitioning instead of dropping them")
+    ap.add_argument("--capacity", type=int, default=None,
+                    help="partition token cap (default: --seq-len)")
     ap.add_argument("--mesh", default="host",
                     choices=["host", "single", "multi"])
     ap.add_argument("--seed", type=int, default=0)
@@ -52,6 +64,20 @@ def main() -> None:
     cfg = get_config(args.arch, smoke=args.smoke)
     print(f"[train] arch={cfg.name} family={cfg.family} mode={args.mode} "
           f"impl={args.impl}")
+
+    if args.auto_partition:
+        if args.mode != "tree":
+            ap.error("--auto-partition requires --mode tree (partitioning "
+                     "is a tree-serialization feature; baseline mode "
+                     "would silently drop oversized trees)")
+        cap = args.capacity if args.capacity is not None else args.seq_len
+        if not 0 < cap <= args.seq_len:
+            ap.error(f"--capacity {cap} must be in (0, --seq-len "
+                     f"{args.seq_len}]")
+        if cfg.ssm is not None and cap % cfg.ssm.chunk_size != 0:
+            ap.error(f"--capacity {cap} must be a multiple of the SSM "
+                     f"chunk size {cfg.ssm.chunk_size}")
+        args.capacity = cap
 
     if args.mesh == "host":
         mesh, daxes = make_host_mesh(), ("data",)
@@ -64,32 +90,90 @@ def main() -> None:
     lc = LoaderConfig(seq_len=args.seq_len, batch_rows=args.rows,
                       trees_per_batch=args.trees, mode=args.mode,
                       kind="agentic", seed=args.seed,
+                      auto_partition=args.auto_partition,
+                      capacity=args.capacity,
                       gen_kwargs=dict(turn_len_range=(8, 48),
                                       num_turns=4))
 
     with sh.use_mesh(mesh, data_axes=daxes):
         params = init_params(cfg, jax.random.key(args.seed))
         opt_state = init_opt_state(params)
-        step_fn = make_train_step(cfg, opt_cfg, impl=args.impl)
 
         tokens_done = 0
+        part_trees = part_tokens = dropped_total = 0
         t0 = time.time()
         history = []
-        for i, (inputs, tb) in enumerate(batches(cfg, lc, args.steps)):
-            ts = time.time()
-            params, opt_state, m = step_fn(params, opt_state, inputs)
-            loss = float(m["total"])
-            dt = time.time() - ts
-            tokens_done += int(tb.valid.sum())
-            history.append({"step": i, "loss": loss, "sec": dt})
-            if i % args.log_every == 0:
-                print(f"step {i:4d} loss {loss:10.4f} "
-                      f"nll/tok {float(m['token_nll_mean']):7.4f} "
-                      f"gnorm {float(m['grad_norm']):8.3f} {dt * 1e3:7.1f}ms",
-                      flush=True)
+        if args.auto_partition:
+            # grads of the packed batch and of the partitioned oversized
+            # trees accumulate into ONE optimizer step (paper §3.4: the
+            # partition stays inside the gradient-accumulation step)
+            gfn = make_grad_fn(cfg, impl=args.impl)
+            update_fn = jax.jit(
+                lambda p, g, s: adamw_update(opt_cfg, p, g, s),
+                donate_argnums=(0, 1, 2))
+            # partition gateways route through XLA, not the fused kernel
+            part_impl = "chunked" if args.impl == "pallas" else args.impl
+            cap = lc.capacity or lc.seq_len
+            for i, sb in enumerate(step_batches(cfg, lc, args.steps)):
+                ts = time.time()
+                n_trees = max(sb.num_trees, 1)
+                loss, grads, m = 0.0, None, {}
+                if sb.inputs is not None:
+                    sb.inputs["num_trees"] = n_trees
+                    li, grads, m = gfn(params, sb.inputs)
+                    loss += float(li)
+                    tokens_done += int(sb.tb.valid.sum())
+                dropped_total += sb.dropped
+                if sb.oversized:
+                    tp = time.time()
+                    l_p, g_p, pinfo = packed_partitioned_value_and_grad(
+                        cfg, params, sb.oversized, cap,
+                        seq_len=lc.seq_len, impl=part_impl,
+                        loss_mode=lc.loss_mode, max_rows=lc.batch_rows)
+                    m["partition_sec"] = time.time() - tp
+                    loss += l_p / n_trees
+                    g_p = jax.tree.map(lambda a: a / n_trees, g_p)
+                    # accumulate in fp32: the wave driver's fp32 grads
+                    # must not round through the packed grads' bf16
+                    grads = g_p if grads is None else jax.tree.map(
+                        lambda a, b: a.astype(jnp.float32) + b, grads, g_p)
+                    part_trees += len(sb.oversized)
+                    part_tokens += pinfo["unique_tokens"]
+                    tokens_done += pinfo["unique_tokens"]
+                if grads is None:      # nothing trainable this step
+                    continue
+                params, opt_state, om = update_fn(params, grads, opt_state)
+                dt = time.time() - ts
+                history.append({"step": i, "loss": loss, "sec": dt,
+                                "oversized": len(sb.oversized),
+                                "dropped": sb.dropped})
+                if i % args.log_every == 0:
+                    nll = float(m.get("token_nll_mean", float("nan")))
+                    print(f"step {i:4d} loss {loss:10.4f} "
+                          f"nll/tok {nll:7.4f} "
+                          f"gnorm {float(om['grad_norm']):8.3f} "
+                          f"parts {len(sb.oversized):2d} "
+                          f"{dt * 1e3:7.1f}ms", flush=True)
+        else:
+            step_fn = make_train_step(cfg, opt_cfg, impl=args.impl)
+            for i, (inputs, tb) in enumerate(batches(cfg, lc, args.steps)):
+                ts = time.time()
+                params, opt_state, m = step_fn(params, opt_state, inputs)
+                loss = float(m["total"])
+                dt = time.time() - ts
+                tokens_done += int(tb.valid.sum())
+                history.append({"step": i, "loss": loss, "sec": dt})
+                if i % args.log_every == 0:
+                    print(f"step {i:4d} loss {loss:10.4f} "
+                          f"nll/tok {float(m['token_nll_mean']):7.4f} "
+                          f"gnorm {float(m['grad_norm']):8.3f} "
+                          f"{dt * 1e3:7.1f}ms", flush=True)
         wall = time.time() - t0
         print(f"[train] {len(history)} steps, {tokens_done} unique tokens, "
               f"{wall:.1f}s wall")
+        if args.auto_partition:
+            print(f"[train] partitioned: {part_trees} oversized trees, "
+                  f"{part_tokens} tokens, {dropped_total} dropped")
         if args.save:
             save_checkpoint(args.save, params, opt_state,
                             meta={"arch": cfg.name, "steps": len(history)})

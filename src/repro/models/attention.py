@@ -171,7 +171,9 @@ def attention(
     (mask = cross_valid only; branch-independent, paper §5 table).
     extra_kv: partition-gateway ancestor KV — dict(k, v, pos) with
     k/v [B, A, Kh, hd] *already roped* in the parent partition; ancestors
-    are visible to every query (they precede the partition root).
+    are visible to every query (they precede the partition root).  An
+    optional boolean ``valid`` [B, A] masks per-row front padding (wave
+    batching pads rows to a shared ancestor length).
     capture_idx: dict name → static index array; returns per-cut
     (k, v) slices at those DFS positions (relayed to child partitions).
     """
@@ -201,9 +203,11 @@ def attention(
         kq_off = A
         k_all = jnp.concatenate([extra_kv["k"].astype(k.dtype), k], axis=1)
         v_all = jnp.concatenate([extra_kv["v"].astype(v.dtype), v], axis=1)
+        anc_kl = jnp.full((B, A), BIG, jnp.int32)
+        if extra_kv.get("valid") is not None:
+            anc_kl = jnp.where(extra_kv["valid"], BIG, -1)
         kl_all = jnp.concatenate(
-            [jnp.full((B, A), BIG, jnp.int32),
-             jnp.where(kv_last >= 0, kv_last + A, -1)], axis=1)
+            [anc_kl, jnp.where(kv_last >= 0, kv_last + A, -1)], axis=1)
         pos_k = jnp.concatenate([extra_kv["pos"], pos_ids], axis=1)
 
     i_idx = kq_off + jnp.arange(S)
@@ -212,8 +216,11 @@ def attention(
                           bidirectional, valid)
         o = _attend_ref(q, k_all, v_all, bias, _scale(cfg))
     elif impl == "chunked":
+        anc_ok = (jnp.ones((B, kq_off), bool)
+                  if extra_kv is None or extra_kv.get("valid") is None
+                  else extra_kv["valid"])
         valid_k = valid if extra_kv is None else jnp.concatenate(
-            [jnp.ones((B, kq_off), bool), valid], axis=1)
+            [anc_ok, valid], axis=1)
         o = _attend_chunked(q, k_all, v_all, i_idx, kl_all, pos_ids, pos_k,
                             cfg.window, bidirectional, valid_k, _scale(cfg))
     elif impl == "pallas":

@@ -106,7 +106,8 @@ def _apply_layer(cfg: ModelConfig, p: dict, kind: str, x: jax.Array,
             {n: s["path_idx"] for n, s in capspec.items()}
         egw = gw.get("attn")
         if egw is not None:
-            egw = {**egw, "pos": meta["anc_pos"]}
+            egw = {**egw, "pos": meta["anc_pos"],
+                   "valid": meta.get("anc_valid")}
         a = attention(p["attn"], cfg.attn, rmsnorm(p["ln1"], x, eps),
                       pos_ids=meta["pos_ids"], kv_last=meta["kv_last"],
                       valid=meta["valid"], impl=impl, bidirectional=bidir,
@@ -415,7 +416,7 @@ def partition_forward(cfg: ModelConfig, params: dict, batch: dict,
     groups = layer_groups(cfg)
     meta = dict(pos_ids=batch["pos_ids"], kv_last=batch["kv_last"],
                 prev_idx=batch["prev_idx"], valid=batch["valid"])
-    for k in ("chunk_parent", "prev_pows", "anc_pos"):
+    for k in ("chunk_parent", "prev_pows", "anc_pos", "anc_valid"):
         if k in batch:
             meta[k] = batch[k]
     x = shard_activation(embed(params["embed"], batch["tokens"]))

@@ -1,0 +1,155 @@
+"""Loader / packing data-fidelity: oversized trees are routed, not
+dropped; packing errors are typed; row slicing keeps the loss normalizer;
+partition token accounting respects chunked configs."""
+import numpy as np
+import pytest
+
+from conftest import tiny_cfg
+from repro.core.packing import (DoesNotFitError, pack_partition_waves,
+                                pack_trees)
+from repro.core.partition import (partition_tree,
+                                  standard_partition_token_counts)
+from repro.core.tree import TrajectoryTree, TreeNode, serialize_tree
+from repro.data.loader import LoaderConfig, step_batches
+from repro.data.synthetic import random_tree, trees_for_batch
+
+
+def _chain_tree(seg_lens, vocab=50):
+    """Deterministic tree: a root with one child per entry after the
+    first, each child a leaf (bushy, easily oversized)."""
+    rng = np.random.default_rng(0)
+    root = TreeNode(tokens=rng.integers(0, vocab, seg_lens[0]))
+    for n in seg_lens[1:]:
+        root.children.append(TreeNode(tokens=rng.integers(0, vocab, n)))
+    return TrajectoryTree(root=root)
+
+
+# ---------------------------------------------------------------------------
+# DoesNotFitError typing
+# ---------------------------------------------------------------------------
+
+def test_pack_trees_raises_typed_overflow():
+    t = _chain_tree([40, 20, 20])
+    ser = serialize_tree(t)
+    with pytest.raises(DoesNotFitError):
+        pack_trees([ser], seq_len=32)
+    with pytest.raises(DoesNotFitError):
+        pack_trees([ser, ser], seq_len=96, batch_size=1)
+
+
+# ---------------------------------------------------------------------------
+# row_slice loss normalizer (was hardcoded to num_trees=1)
+# ---------------------------------------------------------------------------
+
+def test_row_slice_tracks_trees_per_row():
+    trees = [random_tree(np.random.default_rng(s), vocab_size=50,
+                         max_depth=3, seg_len_range=(2, 5))
+             for s in range(5)]
+    sers = [serialize_tree(t) for t in trees]
+    S = max(s.n for s in sers) + sum(sorted(s.n for s in sers)[:2])
+    tb = pack_trees(sers, S)
+    assert tb.row_trees is not None
+    assert int(tb.row_trees.sum()) == len(trees)
+    for b in range(tb.shape[0]):
+        row = tb.row_slice(b)
+        # derived count must agree with the stored per-row count
+        roots = int(((tb.prev_idx[b] == -1) & tb.valid[b]).sum())
+        assert row.num_trees == int(tb.row_trees[b]) == roots
+
+
+# ---------------------------------------------------------------------------
+# standard partitioning accounting under chunked/SSM configs
+# ---------------------------------------------------------------------------
+
+def test_standard_partition_counts_respect_chunking():
+    tree = _chain_tree([13, 11, 9, 7, 10, 12])
+    C, chunk = 48, 8
+    plain = standard_partition_token_counts(tree, C)
+    chunked = standard_partition_token_counts(tree, C, chunk_size=chunk)
+    # chunk alignment pads every node segment AND the re-included
+    # ancestor prefix — the chunked bar must count that padding
+    assert chunked > plain
+    parts = partition_tree(tree, C, chunk_size=chunk)
+    expect = sum(p.ser.n + (-p.anc_len) % chunk + p.anc_len for p in parts)
+    assert chunked == expect
+    # loss_mode threads through without changing the count
+    assert standard_partition_token_counts(
+        tree, C, chunk_size=chunk, loss_mode="uniform") == chunked
+
+
+# ---------------------------------------------------------------------------
+# wave packing geometry
+# ---------------------------------------------------------------------------
+
+def test_pack_partition_waves_topology():
+    trees = []
+    s = 0
+    while len(trees) < 3:
+        t = random_tree(np.random.default_rng(s), vocab_size=97,
+                        max_depth=5, seg_len_range=(3, 9))
+        s += 1
+        if t.num_leaves() >= 3 and t.num_unique_tokens() >= 60:
+            trees.append(t)
+    forest = [partition_tree(t, 40) for t in trees]
+    waves = pack_partition_waves(forest, seq_len=48)
+    placed = set()
+    loc = {}
+    for w, wv in enumerate(waves):
+        assert wv.arrays["tokens"].shape[1] == 48
+        for sl in wv.slots:
+            assert (sl.tree, sl.pid) not in placed
+            placed.add((sl.tree, sl.pid))
+            loc[(sl.tree, sl.pid)] = w
+            part = forest[sl.tree][sl.pid]
+            # every partition's parent sits in the previous wave
+            if part.parent_pid >= 0:
+                assert loc[(sl.tree, part.parent_pid)] == w - 1
+            # tokens land where the slot says
+            ser = part.ser
+            got = wv.arrays["tokens"][sl.row,
+                                      sl.offset:sl.offset + ser.n]
+            np.testing.assert_array_equal(got, ser.tokens)
+        for c in wv.cuts:
+            assert 0 <= c.row < wv.num_rows
+            assert (c.path_idx >= 0).all()
+    assert placed == {(t, p.pid) for t, ps in enumerate(forest)
+                      for p in ps}
+
+
+# ---------------------------------------------------------------------------
+# auto-partition loader: zero drops, token conservation
+# ---------------------------------------------------------------------------
+
+def test_auto_partition_drops_nothing():
+    cfg = tiny_cfg("dense")
+    lc = LoaderConfig(seq_len=96, batch_rows=2, trees_per_batch=4,
+                      mode="tree", kind="agentic", seed=5,
+                      auto_partition=True,
+                      gen_kwargs=dict(turn_len_range=(4, 12), num_turns=2))
+    steps = 6
+    gen_tokens = kept_tokens = 0
+    n_oversized = n_packed = 0
+    for b, sb in enumerate(step_batches(cfg, lc, steps)):
+        assert sb.dropped == 0
+        n_oversized += len(sb.oversized)
+        if sb.tb is not None:
+            kept_tokens += int(sb.tb.valid.sum())
+            n_packed += sb.tb.num_trees
+        kept_tokens += sum(t.num_unique_tokens() for t in sb.oversized)
+    for b in range(steps):
+        ts = trees_for_batch(lc.seed * 100_003 + b, n_trees=4,
+                             kind="agentic", vocab_size=cfg.vocab_size,
+                             turn_len_range=(4, 12), num_turns=2)
+        gen_tokens += sum(t.num_unique_tokens() for t in ts)
+    assert n_oversized > 0, "config produced no oversized trees"
+    assert n_packed > 0, "config produced no packable trees"
+    assert kept_tokens == gen_tokens   # nothing silently lost
+
+
+def test_default_mode_counts_drops():
+    cfg = tiny_cfg("dense")
+    lc = LoaderConfig(seq_len=96, batch_rows=2, trees_per_batch=4,
+                      mode="tree", kind="agentic", seed=5,
+                      gen_kwargs=dict(turn_len_range=(8, 40), num_turns=4))
+    dropped = sum(sb.dropped for sb in step_batches(cfg, lc, 6))
+    assert dropped > 0    # same stream as above: drops are now *visible*
