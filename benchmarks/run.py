@@ -16,6 +16,9 @@ the same rows as a JSON artifact for CI:
   packed_partition   §3.4 — batched wave-scheduled partitioned step:
                      timing vs the whole-tree pass + tree-vs-partitioned
                      token accounting (unique / padded)
+  gateway_impl       §3.3 — the same partitioned step with impl=pallas
+                     (fused kernels on the gateway-extended KV layout)
+                     vs impl=chunked (XLA scan fallback)
 
 Flags:
   --smoke      tiny qwen1.5-0.5B-scale config, CPU-interpret friendly,
@@ -324,6 +327,48 @@ def bench_packed_partition(smoke: bool = False) -> None:
 
 
 # ---------------------------------------------------------------------------
+# §3.3 / App. A.1 — fused pallas kernels on the partition-gateway path
+# ---------------------------------------------------------------------------
+
+def bench_gateway_impl(smoke: bool = False) -> None:
+    """The same wave-scheduled partitioned step (ancestor gateway KV
+    through attention) run with impl='pallas' (fused kernels, incl. fused
+    backward with ancestor cotangents) vs impl='chunked' (XLA scan) —
+    the downgrade PR 2 shipped with is gone; this row tracks what the
+    fused path buys on the gateway-extended KV layout."""
+    from repro.core.gateway import packed_partitioned_value_and_grad
+
+    if smoke:
+        cfg = bench_model(n_layers=2, d_model=64)
+        S, C, turns, seg, n_trees = 128, 64, 5, (12, 40), 1
+    else:
+        cfg = bench_model(n_layers=2)
+        S, C, turns, seg, n_trees = 512, 256, 7, (40, 160), 2
+    params = init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(8)
+    trees = []
+    while len(trees) < n_trees:
+        t = agentic_tree(rng, num_turns=turns, turn_len_range=seg,
+                         vocab_size=1024)
+        if serialize_tree(t).n > S:
+            trees.append(t)
+
+    res = {}
+    for impl in ("chunked", "pallas"):
+        packed_partitioned_value_and_grad(cfg, params, trees, C,
+                                          seq_len=S, impl=impl)  # warm
+        t0 = time.perf_counter()
+        l, _, info = packed_partitioned_value_and_grad(
+            cfg, params, trees, C, seq_len=S, impl=impl)
+        res[impl] = (time.perf_counter() - t0, l, info)
+    (t_c, l_c, _), (t_p, l_p, info) = res["chunked"], res["pallas"]
+    emit("gateway_impl", t_p * 1e6,
+         f"chunked_us={t_c * 1e6:.1f} pallas_vs_chunked={t_c / t_p:.2f}x "
+         f"parts={info['num_partitions']} waves={info['num_waves']} "
+         f"cap={C} loss_rel={abs(l_p - l_c) / max(abs(l_c), 1e-9):.1e}")
+
+
+# ---------------------------------------------------------------------------
 # --smoke — tiny model fwd+bwd through the packed tree loss (CI gate)
 # ---------------------------------------------------------------------------
 
@@ -369,6 +414,7 @@ def main(argv=None) -> None:
         bench_smoke_model(args.impl)
         bench_kernel_blocks()
         bench_packed_partition(smoke=True)
+        bench_gateway_impl(smoke=True)
     else:
         bench_por_sweep(args.impl)
         bench_partition_tokens()
@@ -378,6 +424,7 @@ def main(argv=None) -> None:
         bench_kernel_blocks()
         bench_kernel_fwd_bwd()
         bench_packed_partition()
+        bench_gateway_impl()
     if args.out:
         artifact = {
             "smoke": args.smoke,

@@ -294,19 +294,24 @@ def partitioned_value_and_grad(
     # loss accumulates as a device array; float() once after the recursion
     # so partition dispatch pipelines instead of host-syncing per partition
     total_loss = jnp.zeros((), jnp.float32)
+    total_weight = jnp.zeros((), jnp.float32)
+    total_nll = jnp.zeros((), jnp.float32)
     info = {"num_partitions": len(parts),
             "tokens": sum(p.ser.n for p in parts)}
 
     def process(pid: int, gw_in: Optional[dict], anc_pos: np.ndarray):
-        nonlocal grads_acc, total_loss
+        nonlocal grads_acc, total_loss, total_weight, total_nll
         part = parts[pid]
         batch = make_part_batch(cfg, part, chunk_size, anc_pos)
         capspecs = make_capspecs(cfg, part)
         fwd, bwd = _part_fns(cfg, _names_sig(capspecs), impl,
                              gw_in is not None)
 
-        (loss, caps), _metrics = fwd(params, batch, gw_in, capspecs)
+        (loss, caps), metrics = fwd(params, batch, gw_in, capspecs)
         total_loss = total_loss + loss.astype(jnp.float32)
+        total_weight = total_weight + \
+            metrics["weight_sum"].astype(jnp.float32)
+        total_nll = total_nll + metrics["nll_sum"].astype(jnp.float32)
 
         cot_gw_acc = None if gw_in is None else jax.tree.map(
             lambda a: jnp.zeros(a.shape, jnp.float32), gw_in)
@@ -333,6 +338,8 @@ def partitioned_value_and_grad(
             g_gw, cot_gw_acc)
 
     process(0, None, np.zeros((0,), np.int32))
+    info["weight_sum"] = float(total_weight)
+    info["nll_sum"] = float(total_nll)
     return float(total_loss), grads_acc, info
 
 
@@ -577,6 +584,8 @@ def packed_partitioned_value_and_grad(
     # ---- forward sweep, wave order ---------------------------------------
     st: list[dict] = []
     total_loss = jnp.zeros((), jnp.float32)
+    total_weight = jnp.zeros((), jnp.float32)
+    total_nll = jnp.zeros((), jnp.float32)
     for w, wv in enumerate(waves):
         B, Bb = wv.num_rows, _pow2(wv.num_rows)
         a = wv.arrays
@@ -639,7 +648,10 @@ def packed_partitioned_value_and_grad(
                 assert len(anc_pos_rows[-1]) == \
                     forest[sl.tree][sl.pid].anc_len
             A_real = [len(p) for p in anc_pos_rows]
-            A_max = _pow2(max(A_real))
+            # lo=8: ancestor buckets stay TPU-sublane-aligned so the fused
+            # pallas kernels get an MXU-friendly front-padded KV extension
+            # (the chunked path is indifferent; padded slots are masked)
+            A_max = _pow2(max(A_real), lo=8)
             gw = _stack_gw_rows(rows_gw, A_max, Bb)
             anc_pos = np.zeros((Bb, A_max), np.int32)
             anc_valid = np.zeros((Bb, A_max), bool)
@@ -650,8 +662,11 @@ def packed_partitioned_value_and_grad(
             batch["anc_valid"] = jnp.asarray(anc_valid)
 
         fwd, _ = _part_fns(cfg, _names_sig(capspecs), impl, has_gw)
-        (loss, caps), _metrics = fwd(params, batch, gw, capspecs)
+        (loss, caps), metrics = fwd(params, batch, gw, capspecs)
         total_loss = total_loss + loss.astype(jnp.float32)
+        total_weight = total_weight + \
+            metrics["weight_sum"].astype(jnp.float32)
+        total_nll = total_nll + metrics["nll_sum"].astype(jnp.float32)
         st.append(dict(batch=batch, gw=gw, capspecs=capspecs, caps=caps,
                        A_real=A_real, anc_pos=anc_pos_rows,
                        has_gw=has_gw, cot_gw=None, cot_cut={}))
@@ -697,6 +712,9 @@ def packed_partitioned_value_and_grad(
                                                   cot_gw_row, c.row)
             stp["cot_cut"][cname] = (c.row, cot_caps_row)
 
+    # one host sync point for the scalars (loss reporting + per-token nll)
+    info["weight_sum"] = float(total_weight)
+    info["nll_sum"] = float(total_nll)
     return float(total_loss), grads_acc, info
 
 

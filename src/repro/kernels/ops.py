@@ -8,12 +8,26 @@ kernels/tree_attention_bwd.py (dq, dk, dv) with the same visibility
 predicate and block-skip rule as the forward.  The dense jnp reference
 (kernels/ref.py) is no longer on the training path — it survives purely
 as the test oracle.
+
+Partition gateways (paper §3.3) and sliding windows ride the same op:
+``q_off`` front-concatenated ancestor keys extend the KV axis (query i's
+global index is q_off + i), and ``window``/``pos_q``/``pos_k`` add the
+position-based sliding-window term to the visibility predicate.  The
+backward emits dk/dv for the FULL KV length, so the ancestor cotangents
+(d_extra_k/d_extra_v) flow out through the caller's concatenation — XLA's
+concat transpose slices them back apart for the fp32 child→parent routing
+in core/gateway.py.  Awkward KV lengths (real ancestor depths are not
+MXU-aligned) are back-padded here with invisible keys (kv_last = −1) to
+the TPU sublane multiple; the padding lives outside the custom_vjp, so
+its cotangent slice-off is free and automatic.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.tree_attention import tree_attention as _pallas_fwd
 from repro.kernels.tree_attention_bwd import tree_attention_bwd as _pallas_bwd
@@ -38,32 +52,67 @@ def _fit_block(S: int, want: int) -> int:
     return want
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
-def tree_attention(q, k, v, kv_last, scale: float,
-                   block_q: int = 128, block_k: int = 128):
-    S = q.shape[1]
-    return _pallas_fwd(q, k, v, kv_last, scale, block_q=_fit_block(S, block_q),
-                       block_k=_fit_block(S, block_k),
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9, 10))
+def _tree_attention(q, k, v, kv_last, pos_q, pos_k,
+                    scale, window, q_off, block_q, block_k):
+    S, Skv = q.shape[1], k.shape[1]
+    return _pallas_fwd(q, k, v, kv_last, scale,
+                       block_q=_fit_block(S, block_q),
+                       block_k=_fit_block(Skv, block_k),
+                       q_off=q_off, window=window, pos_q=pos_q, pos_k=pos_k,
                        interpret=not _on_tpu())
 
 
-def _fwd(q, k, v, kv_last, scale, block_q, block_k):
-    S = q.shape[1]
+def _fwd(q, k, v, kv_last, pos_q, pos_k, scale, window, q_off,
+         block_q, block_k):
+    S, Skv = q.shape[1], k.shape[1]
     o, lse = _pallas_fwd(q, k, v, kv_last, scale,
                          block_q=_fit_block(S, block_q),
-                         block_k=_fit_block(S, block_k), save_residuals=True,
+                         block_k=_fit_block(Skv, block_k),
+                         q_off=q_off, window=window, pos_q=pos_q,
+                         pos_k=pos_k, save_residuals=True,
                          interpret=not _on_tpu())
-    return o, (q, k, v, kv_last, o, lse)
+    return o, (q, k, v, kv_last, pos_q, pos_k, o, lse)
 
 
-def _bwd(scale, block_q, block_k, res, do):
-    q, k, v, kv_last, o, lse = res
-    S = q.shape[1]
+def _bwd(scale, window, q_off, block_q, block_k, res, do):
+    q, k, v, kv_last, pos_q, pos_k, o, lse = res
+    S, Skv = q.shape[1], k.shape[1]
     dq, dk, dv = _pallas_bwd(q, k, v, kv_last, o, lse, do, scale,
                              block_q=_fit_block(S, block_q),
-                             block_k=_fit_block(S, block_k),
-                             interpret=not _on_tpu())
-    return dq, dk, dv, None
+                             block_k=_fit_block(Skv, block_k),
+                             q_off=q_off, window=window, pos_q=pos_q,
+                             pos_k=pos_k, interpret=not _on_tpu())
+    return dq, dk, dv, None, None, None
 
 
-tree_attention.defvjp(_fwd, _bwd)
+_tree_attention.defvjp(_fwd, _bwd)
+
+
+def tree_attention(q, k, v, kv_last, scale: float,
+                   block_q: int = 128, block_k: int = 128, *,
+                   q_off: int = 0, window: Optional[int] = None,
+                   pos_q: Optional[jax.Array] = None,
+                   pos_k: Optional[jax.Array] = None):
+    """Fused tree attention.  q: [B,S,H,hd]; k/v: [B,Skv,Kh,hd] with
+    Skv = q_off + S (q_off ancestor keys front-concatenated); kv_last:
+    [B,Skv].  ``window`` (static) adds the sliding-window visibility term
+    over positions pos_q [B,S] / pos_k [B,Skv].  Differentiable in q, k, v
+    — the k/v cotangents cover the ancestor rows too."""
+    if window is None:
+        pos_q = pos_k = None          # unused: keep them out of residuals
+    Skv = k.shape[1]
+    try:
+        _fit_block(Skv, block_k)
+    except ValueError:
+        # gateway-extended KV lengths need not be MXU-aligned: back-pad
+        # with invisible keys (kv_last = −1) to the sublane multiple; the
+        # pad sits outside the custom_vjp so dk/dv slice back automatically
+        pad = -Skv % 8
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_last = jnp.pad(kv_last, ((0, 0), (0, pad)), constant_values=-1)
+        if pos_k is not None:
+            pos_k = jnp.pad(pos_k, ((0, 0), (0, pad)))
+    return _tree_attention(q, k, v, kv_last, pos_q, pos_k,
+                           scale, window, q_off, block_q, block_k)

@@ -14,14 +14,27 @@ NEG_INF = -1e30
 def tree_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                        kv_last: jax.Array, scale: float) -> jax.Array:
     """q: [B,S,H,hd]; k/v: [B,S,Kh,hd]; kv_last: [B,S] int32 → [B,S,H,hd]."""
+    return tree_attention_ref_ext(q, k, v, kv_last, scale)
+
+
+def tree_attention_ref_ext(q: jax.Array, k: jax.Array, v: jax.Array,
+                           kv_last: jax.Array, scale: float, *,
+                           q_off: int = 0, window=None,
+                           pos_q=None, pos_k=None) -> jax.Array:
+    """Gateway/window-aware oracle: q: [B,S,H,hd]; k/v: [B,Skv,Kh,hd] with
+    ``q_off`` front-concatenated ancestor keys (query i has global index
+    q_off + i); ``window`` adds pos_q[i] − pos_k[j] < window over
+    positions.  Mirrors the full fused-kernel visibility predicate."""
     B, S, H, hd = q.shape
-    Kh = k.shape[2]
+    Skv, Kh = k.shape[1], k.shape[2]
     G = H // Kh
     qg = q.reshape(B, S, Kh, G, hd)
     logits = jnp.einsum("bikgd,bjkd->bkgij", qg, k).astype(jnp.float32)
-    i_idx = jnp.arange(S)[:, None]
-    j_idx = jnp.arange(S)[None, :]
+    i_idx = q_off + jnp.arange(S)[:, None]
+    j_idx = jnp.arange(Skv)[None, :]
     vis = (j_idx <= i_idx)[None] & (kv_last[:, None, :] >= i_idx[None])
+    if window is not None:
+        vis = vis & ((pos_q[:, :, None] - pos_k[:, None, :]) < window)
     logits = logits * scale + jnp.where(vis, 0.0, NEG_INF)[:, None, None]
     w = jax.nn.softmax(logits, axis=-1)
     # fully-masked rows (invalid queries) → zero output, not NaN

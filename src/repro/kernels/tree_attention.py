@@ -9,13 +9,25 @@ kernel (App. A.1).  The TPU-native equivalent built here:
     across kv steps;
   - MXU-aligned blocks (default 128×128), fp32 accumulation;
   - **block skipping**: a kv block is skipped when it is entirely
-    anti-causal (kv_start > q_end) or entirely invisible
+    anti-causal (kv_start > q_end), entirely invisible
     (max_j kv_last[j] < q_start — every key's subtree ends before this
-    query block).  Per-block maxima are precomputed XLA-side and prefetched
-    as scalars, so the predicate is resolved before any MXU work.  This is
-    the FlashMask block-sparsity analogue; skipped blocks still have their
-    DMA issued by the pipeline (removing it needs a data-dependent grid —
-    logged as a §Perf follow-up in EXPERIMENTS.md).
+    query block), or — with sliding-window attention — entirely out of
+    window (min_i pos_q[i] − max_j pos_k[j] ≥ window).  Per-block extrema
+    are precomputed XLA-side and prefetched as scalars, so the predicate
+    is resolved before any MXU work.  This is the FlashMask block-sparsity
+    analogue; skipped blocks still have their DMA issued by the pipeline
+    (removing it needs a data-dependent grid — logged as a §Perf follow-up
+    in EXPERIMENTS.md).
+  - **partition gateways** (paper §3.3): queries may attend a KV sequence
+    longer than themselves — ``q_off`` ancestor keys are front-concatenated
+    (k/v: [B, q_off + S, ...]).  Query i's global DFS index is
+    ``q_off + i``; ancestors are marked always-visible (kv_last = BIG) or
+    padding (kv_last = −1) by the caller, so one predicate covers plain,
+    windowed, and gateway-extended attention.
+  - **sliding window** (long-context variants): with ``window`` set,
+    visibility additionally requires pos_q[i] − pos_k[j] < window —
+    *positions*, not DFS indices, so the window applies along the path and
+    across partition gateways (ancestor positions travel in ``pos_k``).
   - ``save_residuals=True`` additionally emits the per-row logsumexp
     ``lse[b, h, i] = m_i + log(l_i)`` (``NEG_INF`` for fully-masked rows),
     the O(S) statistic the fused backward (tree_attention_bwd.py) needs to
@@ -25,6 +37,8 @@ GQA: q head h reads kv head h // (H/Kh) via the BlockSpec index map.
 Validated on CPU with interpret=True against kernels/ref.py.
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -41,57 +55,110 @@ def block_kmax_flat(kv_last, B: int, nk: int, block_k: int):
     return kv_last.reshape(B, nk, block_k).max(-1).reshape(B * nk)
 
 
-def block_live(q_start, q_end, kv_start, block_max):
+def skip_scalars(kv_last, B: int, nq: int, nk: int, block_q: int,
+                 block_k: int, pos_q=None, pos_k=None, window=None):
+    """The flat int32 scalar-prefetch array driving ``block_live``.
+
+    Layout: ``[kmax (B·nk)]`` and, when windowed, additionally
+    ``[kpos_max (B·nk), qpos_min (B·nq)]`` — indexed with the static
+    offsets B·nk and 2·B·nk inside the kernels.  One array (not three)
+    keeps ``num_scalar_prefetch=1`` and the index-map signatures stable."""
+    kmax = block_kmax_flat(kv_last, B, nk, block_k)
+    if window is None:
+        return kmax
+    kpmax = pos_k.astype(jnp.int32).reshape(B, nk, block_k).max(-1)
+    qpmin = pos_q.astype(jnp.int32).reshape(B, nq, block_q).min(-1)
+    return jnp.concatenate(
+        [kmax, kpmax.reshape(B * nk), qpmin.reshape(B * nq)])
+
+
+def block_live(q_start, q_end, kv_start, block_max,
+               qp_min=None, kp_max=None, window: Optional[int] = None):
     """The block-skip predicate (forward AND backward): a (q-block,
-    kv-block) pair is live unless entirely anti-causal (kv_start > q_end)
-    or entirely invisible (block_max = max_j kv_last[j] < q_start).
+    kv-block) pair is live unless entirely anti-causal (kv_start > q_end),
+    entirely invisible (block_max = max_j kv_last[j] < q_start), or —
+    windowed — entirely out of window (min_i pos_q − max_j pos_k ≥ window).
+    q_start/q_end are *global* query indices (ancestor offset applied).
     Works on traced kernel scalars and on numpy arrays alike."""
-    return (kv_start <= q_end) & (block_max >= q_start)
+    live = (kv_start <= q_end) & (block_max >= q_start)
+    if window is not None:
+        live = live & ((qp_min - kp_max) < window)
+    return live
 
 
-def block_live_mask(kv_last, S: int, block_q: int, block_k: int):
+def block_live_mask(kv_last, S: int, block_q: int, block_k: int,
+                    *, q_off: int = 0, pos_q=None, pos_k=None,
+                    window: Optional[int] = None):
     """[nq, nk] bool per batch row: which (q-block, kv-block) pairs the
-    kernel actually computes.  Used by benchmarks to report block
-    sparsity."""
+    kernel actually computes.  ``S`` is the query length; the kv length is
+    ``kv_last``'s (= q_off + S for gateway layouts).  Used by benchmarks
+    to report block sparsity."""
     import numpy as np
     kv_last = np.asarray(kv_last)
-    nq, nk = S // block_q, S // block_k
+    Skv = kv_last.shape[-1]
+    nq, nk = S // block_q, Skv // block_k
     kmax = kv_last.reshape(nk, block_k).max(-1)
     qi = np.arange(nq)[:, None]
     ki = np.arange(nk)[None, :]
-    return block_live(qi * block_q, qi * block_q + block_q - 1,
-                      ki * block_k, kmax[None, :])
+    qpmin = kpmax = None
+    if window is not None:
+        qpmin = np.asarray(pos_q).reshape(nq, block_q).min(-1)[:, None]
+        kpmax = np.asarray(pos_k).reshape(nk, block_k).max(-1)[None, :]
+    return block_live(q_off + qi * block_q,
+                      q_off + qi * block_q + block_q - 1,
+                      ki * block_k, kmax[None, :], qpmin, kpmax, window)
 
 
 def tree_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                    kv_last: jax.Array, scale: float, *,
                    block_q: int = 128, block_k: int = 128,
+                   q_off: int = 0, window: Optional[int] = None,
+                   pos_q: Optional[jax.Array] = None,
+                   pos_k: Optional[jax.Array] = None,
                    save_residuals: bool = False,
                    interpret: bool = False):
-    """q: [B,S,H,hd]; k/v: [B,S,Kh,hd]; kv_last: [B,S] int32 → [B,S,H,hd].
+    """q: [B,S,H,hd]; k/v: [B,Skv,Kh,hd]; kv_last: [B,Skv] int32
+    → [B,S,H,hd].
+
+    ``q_off``: static ancestor offset — query i has global DFS index
+    q_off + i (Skv ≥ q_off + S; any key beyond that is padding the caller
+    marked kv_last = −1).  ``window``: static sliding-window size over
+    *positions*; requires pos_q [B,S] / pos_k [B,Skv].
 
     With ``save_residuals`` returns ``(o, lse)`` where lse is [B,H,S] f32.
     """
     B, S, H, hd = q.shape
-    Kh = k.shape[2]
+    Skv, Kh = k.shape[1], k.shape[2]
     G = max(1, H // Kh)
     block_q = min(block_q, S)
-    block_k = min(block_k, S)
-    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
-    nq, nk = S // block_q, S // block_k
+    block_k = min(block_k, Skv)
+    assert S % block_q == 0 and Skv % block_k == 0, \
+        (S, Skv, block_q, block_k)
+    assert Skv >= q_off + S, (Skv, q_off, S)
+    windowed = window is not None
+    if windowed:
+        assert pos_q is not None and pos_k is not None
+    nq, nk = S // block_q, Skv // block_k
     kv_last = kv_last.astype(jnp.int32)
-    kv_last_max_flat = block_kmax_flat(kv_last, B, nk, block_k)
+    skip = skip_scalars(kv_last, B, nq, nk, block_q, block_k,
+                        pos_q, pos_k, window)
 
-    def kernel(kmax_ref, q_ref, k_ref, v_ref, kl_ref, o_ref, *rest):
+    def kernel(skip_ref, *refs):
+        q_ref, k_ref, v_ref, kl_ref = refs[:4]
+        rest = refs[4:]
+        if windowed:
+            pq_ref, pk_ref = rest[:2]
+            rest = rest[2:]
+        o_ref = rest[0]
         if save_residuals:
-            lse_ref, m_scr, l_scr, acc_scr = rest
+            lse_ref, m_scr, l_scr, acc_scr = rest[1:]
         else:
-            m_scr, l_scr, acc_scr = rest
+            m_scr, l_scr, acc_scr = rest[1:]
         b = pl.program_id(0)
         qi = pl.program_id(2)
         ki = pl.program_id(3)
         num_kv = pl.num_programs(3)
-        q_start = qi * block_q
+        q_start = q_off + qi * block_q          # global DFS index
         q_end = q_start + block_q - 1
         kv_start = ki * block_k
 
@@ -101,7 +168,14 @@ def tree_attention(q: jax.Array, k: jax.Array, v: jax.Array,
             l_scr[...] = jnp.zeros_like(l_scr)
             acc_scr[...] = jnp.zeros_like(acc_scr)
 
-        live = block_live(q_start, q_end, kv_start, kmax_ref[b * nk + ki])
+        if windowed:
+            live = block_live(q_start, q_end, kv_start,
+                              skip_ref[b * nk + ki],
+                              skip_ref[2 * B * nk + b * nq + qi],
+                              skip_ref[B * nk + b * nk + ki], window)
+        else:
+            live = block_live(q_start, q_end, kv_start,
+                              skip_ref[b * nk + ki])
 
         @pl.when(live)
         def _compute():
@@ -117,6 +191,9 @@ def tree_attention(q: jax.Array, k: jax.Array, v: jax.Array,
             j_idx = kv_start + jax.lax.broadcasted_iota(
                 jnp.int32, (block_q, block_k), 1)
             vis = (j_idx <= i_idx) & (kl[None, :] >= i_idx)
+            if windowed:
+                vis = vis & ((pq_ref[0, :][:, None]
+                              - pk_ref[0, :][None, :]) < window)
             lg = jnp.where(vis, logits, NEG_INF)
             m_prev = m_scr[...]
             m_new = jnp.maximum(m_prev, lg.max(axis=1))
@@ -140,29 +217,40 @@ def tree_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                                 NEG_INF)
                 lse_ref[0, 0, :] = lse
 
+    in_specs = [
+        pl.BlockSpec((1, block_q, 1, hd),
+                     lambda b, h, qi, ki, skip: (b, qi, h, 0)),
+        pl.BlockSpec((1, block_k, 1, hd),
+                     lambda b, h, qi, ki, skip: (b, ki, h // G, 0)),
+        pl.BlockSpec((1, block_k, 1, hd),
+                     lambda b, h, qi, ki, skip: (b, ki, h // G, 0)),
+        pl.BlockSpec((1, block_k),
+                     lambda b, h, qi, ki, skip: (b, ki)),
+    ]
+    inputs = [q, k, v, kv_last]
+    if windowed:
+        in_specs += [
+            pl.BlockSpec((1, block_q),
+                         lambda b, h, qi, ki, skip: (b, qi)),
+            pl.BlockSpec((1, block_k),
+                         lambda b, h, qi, ki, skip: (b, ki)),
+        ]
+        inputs += [pos_q.astype(jnp.int32), pos_k.astype(jnp.int32)]
+
     out_shape = [jax.ShapeDtypeStruct((B, S, H, hd), q.dtype)]
     out_specs = [pl.BlockSpec((1, block_q, 1, hd),
-                              lambda b, h, qi, ki, kmax: (b, qi, h, 0))]
+                              lambda b, h, qi, ki, skip: (b, qi, h, 0))]
     if save_residuals:
         out_shape.append(jax.ShapeDtypeStruct((B, H, S), jnp.float32))
         out_specs.append(pl.BlockSpec((1, 1, block_q),
-                                      lambda b, h, qi, ki, kmax: (b, h, qi)))
+                                      lambda b, h, qi, ki, skip: (b, h, qi)))
 
     out = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=(B, H, nq, nk),
-            in_specs=[
-                pl.BlockSpec((1, block_q, 1, hd),
-                             lambda b, h, qi, ki, kmax: (b, qi, h, 0)),
-                pl.BlockSpec((1, block_k, 1, hd),
-                             lambda b, h, qi, ki, kmax: (b, ki, h // G, 0)),
-                pl.BlockSpec((1, block_k, 1, hd),
-                             lambda b, h, qi, ki, kmax: (b, ki, h // G, 0)),
-                pl.BlockSpec((1, block_k),
-                             lambda b, h, qi, ki, kmax: (b, ki)),
-            ],
+            in_specs=in_specs,
             out_specs=out_specs,
             scratch_shapes=[
                 pltpu.VMEM((block_q,), jnp.float32),
@@ -172,7 +260,7 @@ def tree_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         ),
         out_shape=out_shape,
         interpret=interpret,
-    )(kv_last_max_flat, q, k, v, kv_last)
+    )(skip, *inputs)
     if save_residuals:
         return out[0], out[1]
     return out[0]

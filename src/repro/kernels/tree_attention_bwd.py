@@ -12,12 +12,17 @@ one elementwise reduction):
     dq_i = Σ_j ds_ij k_j
     dk_j = Σ_i ds_ij q_i
 
-Both kernels reuse the forward's two-comparison visibility predicate
-(``j ≤ i ∧ kv_last[j] ≥ i``) and its block-skip rule: a (q-block,
-kv-block) pair is skipped when anti-causal (kv_start > q_end) or entirely
-invisible (max_j kv_last[j] < q_start).  Fully-masked rows (padding,
-lse = NEG_INF) contribute nothing because the visibility mask already
-zeroes every p entry in their row.
+Both kernels reuse the forward's visibility predicate — global query
+index ``i = q_off + i_local``, ``j ≤ i ∧ kv_last[j] ≥ i``, and (windowed)
+``pos_q[i] − pos_k[j] < window`` — and its block-skip rule via the shared
+``skip_scalars`` prefetch array, so gateway-extended KV layouts
+(front-concatenated ancestors, paper §3.3) and sliding-window configs
+backprop through exactly the visibility the forward computed.  dk/dv are
+produced for the FULL KV length: rows [0, q_off) are the ancestor
+cotangents (``d_extra_k``/``d_extra_v``) the partition driver routes back
+to the parent partition.  Fully-masked rows (padding, lse = NEG_INF)
+contribute nothing because the visibility mask already zeroes every p
+entry in their row.
 
 Two kernels because the two reductions run along opposite grid axes and
 TPU output revisiting must be consecutive:
@@ -34,18 +39,22 @@ kernels/ref.py (tests/test_kernels_bwd.py).
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.tree_attention import block_kmax_flat, block_live
+from repro.kernels.tree_attention import block_live, skip_scalars
 
 NEG_INF = -1e30
 
 
-def _vis_and_p(qq, kk, kl, lse, scale, q_start, kv_start, block_q, block_k):
-    """Recompute the masked probability block p_ij = exp(s_ij − lse_i)."""
+def _vis_and_p(qq, kk, kl, lse, scale, q_start, kv_start, block_q, block_k,
+               pq=None, pk=None, window=None):
+    """Recompute the masked probability block p_ij = exp(s_ij − lse_i).
+    ``q_start`` is the GLOBAL query index of the block's first row."""
     logits = jax.lax.dot_general(
         qq, kk, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32) * scale
@@ -54,6 +63,8 @@ def _vis_and_p(qq, kk, kl, lse, scale, q_start, kv_start, block_q, block_k):
     j_idx = kv_start + jax.lax.broadcasted_iota(
         jnp.int32, (block_q, block_k), 1)
     vis = (j_idx <= i_idx) & (kl[None, :] >= i_idx)
+    if window is not None:
+        vis = vis & ((pq[:, None] - pk[None, :]) < window)
     # clamp the exponent: invisible entries are discarded by the select but
     # must not overflow to inf first (inf is fine for select, but keep the
     # VPU in normal range); visible entries satisfy s ≤ m ≤ lse + log l.
@@ -61,21 +72,26 @@ def _vis_and_p(qq, kk, kl, lse, scale, q_start, kv_start, block_q, block_k):
     return jnp.where(vis, jnp.exp(expo), 0.0)
 
 
-def _bwd_dq(q, k, v, kv_last, lse, delta, do, scale,
-            block_q, block_k, interpret):
+def _bwd_dq(q, k, v, kv_last, lse, delta, do, scale, skip,
+            block_q, block_k, q_off, window, pos_q, pos_k, interpret):
     B, S, H, hd = q.shape
-    Kh = k.shape[2]
+    Skv, Kh = k.shape[1], k.shape[2]
     G = max(1, H // Kh)
-    nq, nk = S // block_q, S // block_k
-    kmax_flat = block_kmax_flat(kv_last, B, nk, block_k)
+    nq, nk = S // block_q, Skv // block_k
+    windowed = window is not None
 
-    def kernel(kmax_ref, q_ref, k_ref, v_ref, kl_ref, lse_ref, dl_ref,
-               do_ref, dq_ref, dq_scr):
+    def kernel(skip_ref, *refs):
+        q_ref, k_ref, v_ref, kl_ref, lse_ref, dl_ref, do_ref = refs[:7]
+        rest = refs[7:]
+        if windowed:
+            pq_ref, pk_ref = rest[:2]
+            rest = rest[2:]
+        dq_ref, dq_scr = rest
         b = pl.program_id(0)
         qi = pl.program_id(2)
         ki = pl.program_id(3)
         num_kv = pl.num_programs(3)
-        q_start = qi * block_q
+        q_start = q_off + qi * block_q          # global DFS index
         q_end = q_start + block_q - 1
         kv_start = ki * block_k
 
@@ -83,7 +99,14 @@ def _bwd_dq(q, k, v, kv_last, lse, delta, do, scale,
         def _init():
             dq_scr[...] = jnp.zeros_like(dq_scr)
 
-        live = block_live(q_start, q_end, kv_start, kmax_ref[b * nk + ki])
+        if windowed:
+            live = block_live(q_start, q_end, kv_start,
+                              skip_ref[b * nk + ki],
+                              skip_ref[2 * B * nk + b * nq + qi],
+                              skip_ref[B * nk + b * nk + ki], window)
+        else:
+            live = block_live(q_start, q_end, kv_start,
+                              skip_ref[b * nk + ki])
 
         @pl.when(live)
         def _compute():
@@ -94,8 +117,10 @@ def _bwd_dq(q, k, v, kv_last, lse, delta, do, scale,
             lse = lse_ref[0, 0, :]                          # [BQ]
             dlt = dl_ref[0, 0, :]                           # [BQ]
             dd = do_ref[0, :, 0, :].astype(jnp.float32)     # [BQ, hd]
+            pq = pq_ref[0, :] if windowed else None
+            pk = pk_ref[0, :] if windowed else None
             p = _vis_and_p(qq, kk, kl, lse, scale, q_start, kv_start,
-                           block_q, block_k)
+                           block_q, block_k, pq, pk, window)
             dp = jax.lax.dot_general(                        # do·vᵀ [BQ,BK]
                 dd, vv, (((1,), (1,)), ((), ())),
                 preferred_element_type=jnp.float32)
@@ -108,53 +133,69 @@ def _bwd_dq(q, k, v, kv_last, lse, delta, do, scale,
         def _finalize():
             dq_ref[0, :, 0, :] = dq_scr[...].astype(dq_ref.dtype)
 
+    in_specs = [
+        pl.BlockSpec((1, block_q, 1, hd),
+                     lambda b, h, qi, ki, skip: (b, qi, h, 0)),
+        pl.BlockSpec((1, block_k, 1, hd),
+                     lambda b, h, qi, ki, skip: (b, ki, h // G, 0)),
+        pl.BlockSpec((1, block_k, 1, hd),
+                     lambda b, h, qi, ki, skip: (b, ki, h // G, 0)),
+        pl.BlockSpec((1, block_k),
+                     lambda b, h, qi, ki, skip: (b, ki)),
+        pl.BlockSpec((1, 1, block_q),
+                     lambda b, h, qi, ki, skip: (b, h, qi)),
+        pl.BlockSpec((1, 1, block_q),
+                     lambda b, h, qi, ki, skip: (b, h, qi)),
+        pl.BlockSpec((1, block_q, 1, hd),
+                     lambda b, h, qi, ki, skip: (b, qi, h, 0)),
+    ]
+    inputs = [q, k, v, kv_last, lse, delta, do]
+    if windowed:
+        in_specs += [
+            pl.BlockSpec((1, block_q),
+                         lambda b, h, qi, ki, skip: (b, qi)),
+            pl.BlockSpec((1, block_k),
+                         lambda b, h, qi, ki, skip: (b, ki)),
+        ]
+        inputs += [pos_q.astype(jnp.int32), pos_k.astype(jnp.int32)]
+
     return pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=(B, H, nq, nk),
-            in_specs=[
-                pl.BlockSpec((1, block_q, 1, hd),
-                             lambda b, h, qi, ki, kmax: (b, qi, h, 0)),
-                pl.BlockSpec((1, block_k, 1, hd),
-                             lambda b, h, qi, ki, kmax: (b, ki, h // G, 0)),
-                pl.BlockSpec((1, block_k, 1, hd),
-                             lambda b, h, qi, ki, kmax: (b, ki, h // G, 0)),
-                pl.BlockSpec((1, block_k),
-                             lambda b, h, qi, ki, kmax: (b, ki)),
-                pl.BlockSpec((1, 1, block_q),
-                             lambda b, h, qi, ki, kmax: (b, h, qi)),
-                pl.BlockSpec((1, 1, block_q),
-                             lambda b, h, qi, ki, kmax: (b, h, qi)),
-                pl.BlockSpec((1, block_q, 1, hd),
-                             lambda b, h, qi, ki, kmax: (b, qi, h, 0)),
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec((1, block_q, 1, hd),
-                                   lambda b, h, qi, ki, kmax: (b, qi, h, 0)),
+                                   lambda b, h, qi, ki, skip: (b, qi, h, 0)),
             scratch_shapes=[pltpu.VMEM((block_q, hd), jnp.float32)],
         ),
         out_shape=jax.ShapeDtypeStruct((B, S, H, hd), q.dtype),
         interpret=interpret,
-    )(kmax_flat, q, k, v, kv_last, lse, delta, do)
+    )(skip, *inputs)
 
 
-def _bwd_dkv(q, k, v, kv_last, lse, delta, do, scale,
-             block_q, block_k, interpret):
+def _bwd_dkv(q, k, v, kv_last, lse, delta, do, scale, skip,
+             block_q, block_k, q_off, window, pos_q, pos_k, interpret):
     B, S, H, hd = q.shape
-    Kh = k.shape[2]
+    Skv, Kh = k.shape[1], k.shape[2]
     G = max(1, H // Kh)
-    nq, nk = S // block_q, S // block_k
-    kmax_flat = block_kmax_flat(kv_last, B, nk, block_k)
+    nq, nk = S // block_q, Skv // block_k
+    windowed = window is not None
 
-    def kernel(kmax_ref, q_ref, k_ref, v_ref, kl_ref, lse_ref, dl_ref,
-               do_ref, dk_ref, dv_ref, dk_scr, dv_scr):
+    def kernel(skip_ref, *refs):
+        q_ref, k_ref, v_ref, kl_ref, lse_ref, dl_ref, do_ref = refs[:7]
+        rest = refs[7:]
+        if windowed:
+            pq_ref, pk_ref = rest[:2]
+            rest = rest[2:]
+        dk_ref, dv_ref, dk_scr, dv_scr = rest
         b = pl.program_id(0)
         ki = pl.program_id(2)
         g = pl.program_id(3)
         qi = pl.program_id(4)
         num_g = pl.num_programs(3)
         num_q = pl.num_programs(4)
-        q_start = qi * block_q
+        q_start = q_off + qi * block_q          # global DFS index
         q_end = q_start + block_q - 1
         kv_start = ki * block_k
 
@@ -163,7 +204,14 @@ def _bwd_dkv(q, k, v, kv_last, lse, delta, do, scale,
             dk_scr[...] = jnp.zeros_like(dk_scr)
             dv_scr[...] = jnp.zeros_like(dv_scr)
 
-        live = block_live(q_start, q_end, kv_start, kmax_ref[b * nk + ki])
+        if windowed:
+            live = block_live(q_start, q_end, kv_start,
+                              skip_ref[b * nk + ki],
+                              skip_ref[2 * B * nk + b * nq + qi],
+                              skip_ref[B * nk + b * nk + ki], window)
+        else:
+            live = block_live(q_start, q_end, kv_start,
+                              skip_ref[b * nk + ki])
 
         @pl.when(live)
         def _compute():
@@ -174,8 +222,10 @@ def _bwd_dkv(q, k, v, kv_last, lse, delta, do, scale,
             lse = lse_ref[0, 0, :]
             dlt = dl_ref[0, 0, :]
             dd = do_ref[0, :, 0, :].astype(jnp.float32)     # [BQ, hd]
+            pq = pq_ref[0, :] if windowed else None
+            pk = pk_ref[0, :] if windowed else None
             p = _vis_and_p(qq, kk, kl, lse, scale, q_start, kv_start,
-                           block_q, block_k)
+                           block_q, block_k, pq, pk, window)
             dv_scr[...] += jax.lax.dot_general(              # pᵀ·do [BK,hd]
                 p, dd, (((0,), (0,)), ((), ())),
                 preferred_element_type=jnp.float32)
@@ -192,41 +242,52 @@ def _bwd_dkv(q, k, v, kv_last, lse, delta, do, scale,
             dk_ref[0, :, 0, :] = dk_scr[...].astype(dk_ref.dtype)
             dv_ref[0, :, 0, :] = dv_scr[...].astype(dv_ref.dtype)
 
+    in_specs = [
+        pl.BlockSpec(
+            (1, block_q, 1, hd),
+            lambda b, kh, ki, g, qi, skip: (b, qi, kh * G + g, 0)),
+        pl.BlockSpec(
+            (1, block_k, 1, hd),
+            lambda b, kh, ki, g, qi, skip: (b, ki, kh, 0)),
+        pl.BlockSpec(
+            (1, block_k, 1, hd),
+            lambda b, kh, ki, g, qi, skip: (b, ki, kh, 0)),
+        pl.BlockSpec(
+            (1, block_k),
+            lambda b, kh, ki, g, qi, skip: (b, ki)),
+        pl.BlockSpec(
+            (1, 1, block_q),
+            lambda b, kh, ki, g, qi, skip: (b, kh * G + g, qi)),
+        pl.BlockSpec(
+            (1, 1, block_q),
+            lambda b, kh, ki, g, qi, skip: (b, kh * G + g, qi)),
+        pl.BlockSpec(
+            (1, block_q, 1, hd),
+            lambda b, kh, ki, g, qi, skip: (b, qi, kh * G + g, 0)),
+    ]
+    inputs = [q, k, v, kv_last, lse, delta, do]
+    if windowed:
+        in_specs += [
+            pl.BlockSpec((1, block_q),
+                         lambda b, kh, ki, g, qi, skip: (b, qi)),
+            pl.BlockSpec((1, block_k),
+                         lambda b, kh, ki, g, qi, skip: (b, ki)),
+        ]
+        inputs += [pos_q.astype(jnp.int32), pos_k.astype(jnp.int32)]
+
     out = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=(B, Kh, nk, G, nq),
-            in_specs=[
-                pl.BlockSpec(
-                    (1, block_q, 1, hd),
-                    lambda b, kh, ki, g, qi, kmax: (b, qi, kh * G + g, 0)),
-                pl.BlockSpec(
-                    (1, block_k, 1, hd),
-                    lambda b, kh, ki, g, qi, kmax: (b, ki, kh, 0)),
-                pl.BlockSpec(
-                    (1, block_k, 1, hd),
-                    lambda b, kh, ki, g, qi, kmax: (b, ki, kh, 0)),
-                pl.BlockSpec(
-                    (1, block_k),
-                    lambda b, kh, ki, g, qi, kmax: (b, ki)),
-                pl.BlockSpec(
-                    (1, 1, block_q),
-                    lambda b, kh, ki, g, qi, kmax: (b, kh * G + g, qi)),
-                pl.BlockSpec(
-                    (1, 1, block_q),
-                    lambda b, kh, ki, g, qi, kmax: (b, kh * G + g, qi)),
-                pl.BlockSpec(
-                    (1, block_q, 1, hd),
-                    lambda b, kh, ki, g, qi, kmax: (b, qi, kh * G + g, 0)),
-            ],
+            in_specs=in_specs,
             out_specs=[
                 pl.BlockSpec(
                     (1, block_k, 1, hd),
-                    lambda b, kh, ki, g, qi, kmax: (b, ki, kh, 0)),
+                    lambda b, kh, ki, g, qi, skip: (b, ki, kh, 0)),
                 pl.BlockSpec(
                     (1, block_k, 1, hd),
-                    lambda b, kh, ki, g, qi, kmax: (b, ki, kh, 0)),
+                    lambda b, kh, ki, g, qi, skip: (b, ki, kh, 0)),
             ],
             scratch_shapes=[
                 pltpu.VMEM((block_k, hd), jnp.float32),
@@ -234,11 +295,11 @@ def _bwd_dkv(q, k, v, kv_last, lse, delta, do, scale,
             ],
         ),
         out_shape=[
-            jax.ShapeDtypeStruct((B, S, Kh, hd), k.dtype),
-            jax.ShapeDtypeStruct((B, S, Kh, hd), v.dtype),
+            jax.ShapeDtypeStruct((B, Skv, Kh, hd), k.dtype),
+            jax.ShapeDtypeStruct((B, Skv, Kh, hd), v.dtype),
         ],
         interpret=interpret,
-    )(kmax_flat, q, k, v, kv_last, lse, delta, do)
+    )(skip, *inputs)
     return out[0], out[1]
 
 
@@ -246,23 +307,35 @@ def tree_attention_bwd(q: jax.Array, k: jax.Array, v: jax.Array,
                        kv_last: jax.Array, o: jax.Array, lse: jax.Array,
                        do: jax.Array, scale: float, *,
                        block_q: int = 128, block_k: int = 128,
+                       q_off: int = 0, window: Optional[int] = None,
+                       pos_q: Optional[jax.Array] = None,
+                       pos_k: Optional[jax.Array] = None,
                        interpret: bool = False):
     """Fused dq/dk/dv for tree attention.
 
-    q/o/do: [B,S,H,hd]; k/v: [B,S,Kh,hd]; kv_last: [B,S] int32;
+    q/o/do: [B,S,H,hd]; k/v: [B,Skv,Kh,hd]; kv_last: [B,Skv] int32;
     lse: [B,H,S] f32 from the forward's ``save_residuals=True``.
-    Returns (dq, dk, dv) in the input dtypes.
+    q_off/window/pos_q/pos_k: same gateway/window layout as the forward.
+    Returns (dq, dk, dv) in the input dtypes; dk/dv cover the full Skv,
+    including the ancestor rows [0, q_off) (d_extra_k / d_extra_v).
     """
     B, S, H, hd = q.shape
+    Skv = k.shape[1]
     block_q = min(block_q, S)
-    block_k = min(block_k, S)
-    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+    block_k = min(block_k, Skv)
+    assert S % block_q == 0 and Skv % block_k == 0, \
+        (S, Skv, block_q, block_k)
+    assert Skv >= q_off + S, (Skv, q_off, S)
     kv_last = kv_last.astype(jnp.int32)
     # Δ_i = Σ_d do_id o_id, [B,H,S] — cheap elementwise reduce, XLA-side.
     delta = (do.astype(jnp.float32) * o.astype(jnp.float32)
              ).sum(-1).transpose(0, 2, 1)
-    dq = _bwd_dq(q, k, v, kv_last, lse, delta, do, scale,
-                 block_q, block_k, interpret)
-    dk, dv = _bwd_dkv(q, k, v, kv_last, lse, delta, do, scale,
-                      block_q, block_k, interpret)
+    # one shared prefetch array for both kernels (same blocks, same skip)
+    skip = skip_scalars(kv_last, B, S // block_q, Skv // block_k,
+                        block_q, block_k, pos_q, pos_k, window)
+    dq = _bwd_dq(q, k, v, kv_last, lse, delta, do, scale, skip,
+                 block_q, block_k, q_off, window, pos_q, pos_k, interpret)
+    dk, dv = _bwd_dkv(q, k, v, kv_last, lse, delta, do, scale, skip,
+                      block_q, block_k, q_off, window, pos_q, pos_k,
+                      interpret)
     return dq, dk, dv

@@ -30,5 +30,7 @@ def data_axes(multi_pod: bool = False) -> tuple[str, ...]:
 
 
 def make_host_mesh():
-    """1-device mesh for CPU smoke runs of the launcher."""
-    return jax.make_mesh((1, 1), ("data", "model"))
+    """(local_devices, 1) mesh for single-host runs of the launcher: the
+    data axis spans every local device, so ``--mesh host`` on a multichip
+    host data-parallelizes instead of pinning everything to device 0."""
+    return jax.make_mesh((jax.local_device_count(), 1), ("data", "model"))

@@ -26,7 +26,7 @@ import jax.numpy as jnp
 from repro import sharding as sh
 from repro.configs import get_config
 from repro.core.gateway import packed_partitioned_value_and_grad
-from repro.data.loader import LoaderConfig, batches, step_batches
+from repro.data.loader import LoaderConfig, step_batches
 from repro.launch.mesh import data_axes, make_host_mesh, \
     make_production_mesh
 from repro.models.model import init_params
@@ -81,6 +81,13 @@ def main() -> None:
 
     if args.mesh == "host":
         mesh, daxes = make_host_mesh(), ("data",)
+        ndata = mesh.shape["data"]
+        if args.rows % ndata:
+            ap.error(f"--rows {args.rows} must be a multiple of the host "
+                     f"mesh's data axis ({ndata} local devices) so batch "
+                     f"rows shard evenly; pick --rows "
+                     f"{((args.rows // ndata) + 1) * ndata} or run fewer "
+                     f"devices")
     else:
         mesh = make_production_mesh(multi_pod=args.mesh == "multi")
         daxes = data_axes(args.mesh == "multi")
@@ -111,24 +118,24 @@ def main() -> None:
             update_fn = jax.jit(
                 lambda p, g, s: adamw_update(opt_cfg, p, g, s),
                 donate_argnums=(0, 1, 2))
-            # partition gateways route through XLA, not the fused kernel
-            part_impl = "chunked" if args.impl == "pallas" else args.impl
             cap = lc.capacity or lc.seq_len
             for i, sb in enumerate(step_batches(cfg, lc, args.steps)):
                 ts = time.time()
                 n_trees = max(sb.num_trees, 1)
                 loss, grads, m = 0.0, None, {}
+                nll = float("nan")
                 if sb.inputs is not None:
                     sb.inputs["num_trees"] = n_trees
                     li, grads, m = gfn(params, sb.inputs)
                     loss += float(li)
+                    nll = float(m["token_nll_mean"])
                     tokens_done += int(sb.tb.valid.sum())
                 dropped_total += sb.dropped
                 if sb.oversized:
                     tp = time.time()
                     l_p, g_p, pinfo = packed_partitioned_value_and_grad(
                         cfg, params, sb.oversized, cap,
-                        seq_len=lc.seq_len, impl=part_impl,
+                        seq_len=lc.seq_len, impl=args.impl,
                         loss_mode=lc.loss_mode, max_rows=lc.batch_rows)
                     m["partition_sec"] = time.time() - tp
                     loss += l_p / n_trees
@@ -140,15 +147,21 @@ def main() -> None:
                     part_trees += len(sb.oversized)
                     part_tokens += pinfo["unique_tokens"]
                     tokens_done += pinfo["unique_tokens"]
+                    if sb.inputs is None:
+                        # batch is entirely oversized trees: report the
+                        # partitioned-path per-token nll (token CE only,
+                        # comparable to token_nll_mean), not nan
+                        nll = pinfo["nll_sum"] / max(pinfo["weight_sum"],
+                                                     1e-9)
                 if grads is None:      # nothing trainable this step
                     continue
                 params, opt_state, om = update_fn(params, grads, opt_state)
                 dt = time.time() - ts
-                history.append({"step": i, "loss": loss, "sec": dt,
+                history.append({"step": i, "loss": loss, "nll": nll,
+                                "sec": dt,
                                 "oversized": len(sb.oversized),
                                 "dropped": sb.dropped})
                 if i % args.log_every == 0:
-                    nll = float(m.get("token_nll_mean", float("nan")))
                     print(f"step {i:4d} loss {loss:10.4f} "
                           f"nll/tok {nll:7.4f} "
                           f"gnorm {float(om['grad_norm']):8.3f} "
@@ -156,13 +169,19 @@ def main() -> None:
                           f"{dt * 1e3:7.1f}ms", flush=True)
         else:
             step_fn = make_train_step(cfg, opt_cfg, impl=args.impl)
-            for i, (inputs, tb) in enumerate(batches(cfg, lc, args.steps)):
+            for i, sb in enumerate(step_batches(cfg, lc, args.steps)):
+                dropped_total += sb.dropped
+                if sb.inputs is None:   # every tree dropped this step
+                    continue
                 ts = time.time()
-                params, opt_state, m = step_fn(params, opt_state, inputs)
+                params, opt_state, m = step_fn(params, opt_state, sb.inputs)
                 loss = float(m["total"])
                 dt = time.time() - ts
-                tokens_done += int(tb.valid.sum())
-                history.append({"step": i, "loss": loss, "sec": dt})
+                tokens_done += int(sb.tb.valid.sum())
+                history.append({"step": i, "loss": loss,
+                                "nll": float(m["token_nll_mean"]),
+                                "sec": dt, "oversized": 0,
+                                "dropped": sb.dropped})
                 if i % args.log_every == 0:
                     print(f"step {i:4d} loss {loss:10.4f} "
                           f"nll/tok {float(m['token_nll_mean']):7.4f} "
@@ -170,7 +189,7 @@ def main() -> None:
                           f"{dt * 1e3:7.1f}ms", flush=True)
         wall = time.time() - t0
         print(f"[train] {len(history)} steps, {tokens_done} unique tokens, "
-              f"{wall:.1f}s wall")
+              f"{dropped_total} dropped trees, {wall:.1f}s wall")
         if args.auto_partition:
             print(f"[train] partitioned: {part_trees} oversized trees, "
                   f"{part_tokens} tokens, {dropped_total} dropped")

@@ -9,11 +9,15 @@ Implementations:
   - 'ref'     : materialized mask (oracle; small shapes / tests)
   - 'chunked' : lax.scan over KV blocks with online softmax — bounded
                 memory; the XLA path used for dry-runs and large shapes.
-  - 'pallas'  : kernels/tree_attention.py (TPU target; FlashMask-style
-                block skipping).  Falls back to interpret mode on CPU.
+  - 'pallas'  : kernels/ops.py fused forward+backward (TPU target;
+                FlashMask-style block skipping).  Falls back to interpret
+                mode on CPU.  Covers partition gateways (extra_kv
+                ancestors, q_off index offset, per-row front-padding
+                masks) and sliding windows natively — no XLA downgrade.
 
 Sliding-window attention restricts additionally to pos_i − pos_j < window
-(positions, not DFS indices — window applies along the *path*).
+(positions, not DFS indices — window applies along the *path* and across
+partition gateways: ancestor positions travel in extra_kv["pos"]).
 """
 from __future__ import annotations
 
@@ -103,8 +107,31 @@ def _attend_chunked(q, k, v, i_idx, kv_last, pos_q, pos_k, window,
     Skv, Kh = k.shape[1], k.shape[2]
     G = H // Kh
     kv_chunk = min(kv_chunk, Skv)
-    while Skv % kv_chunk != 0:          # e.g. gateway-extended KV lengths
-        kv_chunk -= 1
+    if Skv % kv_chunk:
+        # awkward KV lengths (e.g. gateway-extended, or prime-ish): the
+        # old decrement loop degraded to chunk 1 (an Skv-step scan)
+        # whenever Skv had no large divisor.  Prefer the largest divisor
+        # within 4x of the requested chunk (no padding, e.g. 1032 → 516);
+        # failing that, a power-of-two chunk minimizing the padded length,
+        # back-padding with invisible keys.
+        lo = max(kv_chunk // 4, 1)
+        div = next((d for d in range(kv_chunk, lo - 1, -1)
+                    if Skv % d == 0), None)
+        if div is not None:
+            kv_chunk = div
+        else:
+            cands = [c for c in (1 << i for i in
+                                 range(3, kv_chunk.bit_length()))
+                     if 4 * c >= kv_chunk] or [8]
+            kv_chunk = min(cands, key=lambda c: (-(-Skv // c) * c, -c))
+            pad = -Skv % kv_chunk
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            kv_last = jnp.pad(kv_last, ((0, 0), (0, pad)),
+                              constant_values=-1)
+            pos_k = jnp.pad(pos_k, ((0, 0), (0, pad)))
+            valid_k = jnp.pad(valid_k, ((0, 0), (0, pad)))
+            Skv += pad
     n_chunks = Skv // kv_chunk
     qg = q.reshape(B, S, Kh, G, hd)
 
@@ -225,10 +252,16 @@ def attention(
                             cfg.window, bidirectional, valid_k, _scale(cfg))
     elif impl == "pallas":
         from repro.kernels.ops import tree_attention as pallas_attn
-        if extra_kv is not None:
-            raise NotImplementedError(
-                "pallas impl + partition gateway: use 'chunked'")
-        o = pallas_attn(q, k, v, kv_last, _scale(cfg))
+        if bidirectional:
+            # encoder-style validity masks have no fused kernel (tiny
+            # prefix shapes, never the hot path) — use the oracle bias
+            bias = _tree_bias(i_idx, kl_all, pos_ids, pos_k, cfg.window,
+                              bidirectional, valid)
+            o = _attend_ref(q, k_all, v_all, bias, _scale(cfg))
+        else:
+            o = pallas_attn(q, k_all, v_all, kl_all, _scale(cfg),
+                            q_off=kq_off, window=cfg.window,
+                            pos_q=pos_ids, pos_k=pos_k)
     else:
         raise ValueError(impl)
     y = o.reshape(B, S, -1) @ params["wo"]

@@ -505,7 +505,10 @@ def partition_loss(cfg: ModelConfig, params: dict, batch: dict, gw_in,
 
     metrics = {"weight_sum": jnp.sum(w)
                + (jnp.sum(batch["extra_weight"])
-                  if "extra_pos" in batch else 0.0)}
+                  if "extra_pos" in batch else 0.0),
+               # token CE only (no router/z aux) — the drivers aggregate
+               # this into a per-token nll comparable to token_nll_mean
+               "nll_sum": loss}
     return (loss + aux, caps), metrics
 
 

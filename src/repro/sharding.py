@@ -128,7 +128,7 @@ _RULES: list[tuple[str, Any]] = [
     (r"mlp/wi_gate$|mlp/wi_up$|cm/wk$",
      lambda s, m: P(None, "M" if s[1] % m == 0 else None)),
     (r"mlp/wo$|cm/wv$",    lambda s, m: P("M" if s[0] % m == 0 else None, None)),
-    (r"mlp/b i$",          lambda s, m: P("M" if s[0] % m == 0 else None)),
+    (r"mlp/bi$",           lambda s, m: P("M" if s[0] % m == 0 else None)),
     # SSM projections: z/x (d_inner) shard on model; B/C/dt stay replicated
     # on their tiny output dims (see mamba2.init_mamba2 docstring)
     (r"ssm/in_[zx]$|ssm/in_proj$|tm/w[rkvg]$|ssm/w[qkvz]$",

@@ -1,0 +1,226 @@
+"""models/attention.py dispatch equivalences on the partition-gateway and
+sliding-window paths: 'pallas' (fused kernels), 'chunked' (XLA scan) and
+'ref' (dense oracle) must agree — outputs AND gradients, including the
+ancestor (extra_kv) cotangents the wave driver routes child → parent.
+Also pins the _attend_chunked divisor fix: a prime-ish KV length must not
+degrade the scan to chunk size 1."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import AttnCfg
+from repro.core.packing import pack_trees
+from repro.core.tree import serialize_tree
+from repro.data.synthetic import trees_for_batch
+from repro.models.attention import (_attend_chunked, _attend_ref,
+                                    _tree_bias, attention, init_attention)
+
+ATTN = AttnCfg(n_heads=4, n_kv_heads=2, head_dim=8, rope_theta=10_000.0)
+D = 32
+
+
+def _packed_meta(seed: int, B: int, S: int):
+    trees = trees_for_batch(seed, n_trees=6 * B, kind="random",
+                            seg_len_range=(1, 4), max_depth=3)
+    sers, used = [], 0
+    for t in trees:
+        s = serialize_tree(t)
+        if used + s.n <= B * S * 3 // 4:
+            sers.append(s)
+            used += s.n
+    tb = pack_trees(sers, S, batch_size=B)
+    return (jnp.asarray(tb.pos_ids), jnp.asarray(tb.kv_last),
+            jnp.asarray(tb.valid))
+
+
+def _gateway_extra(rng, B: int, A: int, pad_rows=(5, 0)):
+    Kh, hd = ATTN.n_kv_heads, ATTN.head_dim
+    valid = np.ones((B, A), bool)
+    for r, p in zip(range(B), pad_rows):
+        valid[r, :p] = False
+    return {
+        "k": jnp.asarray(rng.normal(size=(B, A, Kh, hd)), jnp.float32),
+        "v": jnp.asarray(rng.normal(size=(B, A, Kh, hd)), jnp.float32),
+        "pos": jnp.broadcast_to(jnp.arange(A, dtype=jnp.int32), (B, A)),
+        "valid": jnp.asarray(valid),
+    }
+
+
+@pytest.mark.parametrize("window", [None, 12])
+@pytest.mark.parametrize("A", [16, 20])   # aligned + awkward (pad) depths
+def test_impls_agree_on_gateway_path(window, A):
+    cfg = dataclasses.replace(ATTN, window=window)
+    rng = np.random.default_rng(A + (window or 0))
+    B, S = 2, 64
+    pos_ids, kv_last, valid = _packed_meta(3, B, S)
+    params = init_attention(jax.random.key(0), cfg, D)
+    x = jnp.asarray(rng.normal(size=(B, S, D)), jnp.float32)
+    extra = _gateway_extra(rng, B, A)
+
+    def run(impl, x_, ek, ev):
+        return attention(params, cfg, x_, pos_ids=pos_ids, kv_last=kv_last,
+                         valid=valid, impl=impl,
+                         extra_kv={**extra, "k": ek, "v": ev})
+
+    outs, grads = {}, {}
+    for impl in ("ref", "chunked", "pallas"):
+        outs[impl] = run(impl, x, extra["k"], extra["v"])
+        grads[impl] = jax.grad(
+            lambda *a: (run(impl, *a) ** 2).sum(),
+            argnums=(0, 1, 2))(x, extra["k"], extra["v"])
+    for impl in ("chunked", "pallas"):
+        np.testing.assert_allclose(np.asarray(outs[impl]),
+                                   np.asarray(outs["ref"]),
+                                   atol=2e-5, rtol=2e-5, err_msg=impl)
+        for name, a, b in zip(("dx", "d_extra_k", "d_extra_v"),
+                              grads[impl], grads["ref"]):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=2e-4, rtol=2e-4,
+                                       err_msg=f"{impl}:{name}")
+    # the ancestor cotangents are live, not zeros
+    assert float(jnp.abs(grads["pallas"][1]).max()) > 1e-4
+
+
+def test_pallas_applies_sliding_window():
+    """Regression: the pallas impl used to silently ignore cfg.window —
+    windowed configs returned full-attention results."""
+    cfg_w = dataclasses.replace(ATTN, window=8)
+    cfg_full = ATTN
+    rng = np.random.default_rng(17)
+    B, S = 2, 128
+    pos_ids, kv_last, valid = _packed_meta(5, B, S)
+    params = init_attention(jax.random.key(1), cfg_w, D)
+    x = jnp.asarray(rng.normal(size=(B, S, D)), jnp.float32)
+
+    def run(cfg, impl):
+        # fully-masked padding rows are undefined in the dense-bias path
+        # (uniform softmax) and zero in the kernel — training never reads
+        # them, so compare valid rows only
+        o = attention(params, cfg, x, pos_ids=pos_ids, kv_last=kv_last,
+                      valid=valid, impl=impl)
+        return o * valid[..., None]
+
+    np.testing.assert_allclose(np.asarray(run(cfg_w, "pallas")),
+                               np.asarray(run(cfg_w, "ref")),
+                               atol=2e-5, rtol=2e-5)
+    # teeth: windowed ≠ full attention on these trees
+    assert float(jnp.abs(run(cfg_w, "ref")
+                         - run(cfg_full, "ref")).max()) > 1e-3
+
+
+def _scan_lengths(closed_jaxpr):
+    out = []
+    for eqn in closed_jaxpr.jaxpr.eqns:
+        if eqn.primitive.name == "scan":
+            out.append(eqn.params["length"])
+        for p in eqn.params.values():
+            if hasattr(p, "jaxpr"):
+                out.extend(_scan_lengths(p))
+    return out
+
+
+def test_chunked_prime_kv_len_does_not_degrade():
+    """_attend_chunked on a prime-ish Skv (gateway-extended KV): the old
+    divisor loop degraded to kv_chunk=1 (an Skv-step scan); now the KV is
+    padded to a power-of-two chunk boundary.  Checks both the scan length
+    (≤ ceil(Skv/chunk) steps) and numerical agreement with the oracle."""
+    rng = np.random.default_rng(29)
+    B, S, H, hd = 1, 64, 2, 8
+    A = 37                       # Skv = 101, prime
+    Skv = A + S
+    kv_chunk = 32
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, Skv, H, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, Skv, H, hd)), jnp.float32)
+    kv_last = jnp.concatenate(
+        [jnp.full((B, A), 1 << 30, jnp.int32),
+         jnp.broadcast_to(jnp.arange(S) // 16 * 16 + 15 + A,
+                          (B, S)).astype(jnp.int32)], axis=1)
+    i_idx = A + jnp.arange(S)
+    pos_q = jnp.broadcast_to(A + jnp.arange(S), (B, S)).astype(jnp.int32)
+    pos_k = jnp.concatenate(
+        [jnp.broadcast_to(jnp.arange(A), (B, A)).astype(jnp.int32),
+         pos_q], axis=1)
+    valid_k = jnp.ones((B, Skv), bool)
+
+    def f(q_, k_, v_):
+        return _attend_chunked(q_, k_, v_, i_idx, kv_last, pos_q, pos_k,
+                               None, False, valid_k, hd ** -0.5,
+                               kv_chunk=kv_chunk)
+
+    # prime Skv has no divisor ≥ kv_chunk/4, so the pad path picks a
+    # pow2 chunk ≥ 8 — a bounded scan, never the Skv-step degradation
+    lengths = _scan_lengths(jax.make_jaxpr(f)(q, k, v))
+    assert lengths and max(lengths) <= -(-Skv // 8) + 1, lengths
+    assert max(lengths) < Skv
+    bias = _tree_bias(i_idx, kv_last, pos_q, pos_k, None, False, valid_k)
+    o_ref = _attend_ref(q, k, v, bias, hd ** -0.5)
+    np.testing.assert_allclose(np.asarray(f(q, k, v)), np.asarray(o_ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_chunked_composite_kv_len_uses_divisor_without_pad():
+    """Gateway-typical Skv = pow2 + small ancestor bucket (here 264 =
+    256 + 8): the picker finds a large divisor (132 → two chunks, zero
+    padding) instead of padding to the next pow2 multiple (2x scan)."""
+    rng = np.random.default_rng(37)
+    B, S, H, hd = 1, 64, 2, 8
+    A = 200
+    Skv = A + S                  # 264 = 2³·3·11
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, Skv, H, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, Skv, H, hd)), jnp.float32)
+    kv_last = jnp.concatenate(
+        [jnp.full((B, A), 1 << 30, jnp.int32),
+         jnp.broadcast_to(jnp.arange(S) + A, (B, S)).astype(jnp.int32)],
+        axis=1)
+    i_idx = A + jnp.arange(S)
+    pos_q = jnp.broadcast_to(A + jnp.arange(S), (B, S)).astype(jnp.int32)
+    pos_k = jnp.concatenate(
+        [jnp.broadcast_to(jnp.arange(A), (B, A)).astype(jnp.int32),
+         pos_q], axis=1)
+    valid_k = jnp.ones((B, Skv), bool)
+
+    def f(q_, k_, v_):
+        return _attend_chunked(q_, k_, v_, i_idx, kv_last, pos_q, pos_k,
+                               None, False, valid_k, hd ** -0.5,
+                               kv_chunk=256)
+
+    lengths = _scan_lengths(jax.make_jaxpr(f)(q, k, v))
+    assert lengths and max(lengths) == 2, lengths
+    bias = _tree_bias(i_idx, kv_last, pos_q, pos_k, None, False, valid_k)
+    o_ref = _attend_ref(q, k, v, bias, hd ** -0.5)
+    np.testing.assert_allclose(np.asarray(f(q, k, v)), np.asarray(o_ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_chunked_prime_kv_len_windowed():
+    """Same prime-ish Skv with a sliding window — padded keys must stay
+    invisible under the window term too."""
+    rng = np.random.default_rng(31)
+    B, S, H, hd = 1, 64, 2, 8
+    A = 37
+    Skv = A + S
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, Skv, H, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, Skv, H, hd)), jnp.float32)
+    kv_last = jnp.concatenate(
+        [jnp.full((B, A), 1 << 30, jnp.int32),
+         jnp.broadcast_to(jnp.arange(S) + A, (B, S)).astype(jnp.int32)],
+        axis=1)
+    i_idx = A + jnp.arange(S)
+    pos_q = jnp.broadcast_to(A + jnp.arange(S), (B, S)).astype(jnp.int32)
+    pos_k = jnp.concatenate(
+        [jnp.broadcast_to(jnp.arange(A), (B, A)).astype(jnp.int32),
+         pos_q], axis=1)
+    valid_k = jnp.ones((B, Skv), bool)
+    o = _attend_chunked(q, k, v, i_idx, kv_last, pos_q, pos_k, 16, False,
+                        valid_k, hd ** -0.5, kv_chunk=32)
+    bias = _tree_bias(i_idx, kv_last, pos_q, pos_k, 16, False, valid_k)
+    o_ref = _attend_ref(q, k, v, bias, hd ** -0.5)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                               atol=2e-5, rtol=2e-5)
+    assert np.isfinite(np.asarray(o)).all()

@@ -12,10 +12,13 @@ from repro.core.packing import pack_trees
 from repro.core.tree import serialize_tree
 from repro.data.synthetic import trees_for_batch
 from repro.kernels.ops import tree_attention
-from repro.kernels.ref import tree_attention_ref
+from repro.kernels.ref import tree_attention_ref, tree_attention_ref_ext
+
+BIG = 1 << 30
 
 
-def _tree_kv_last(seed: int, B: int, S: int) -> jnp.ndarray:
+def _tree_meta(seed: int, B: int, S: int):
+    """(kv_last, pos_ids) of a packed random-tree batch."""
     trees = trees_for_batch(seed, n_trees=6 * B, kind="random",
                             seg_len_range=(1, 4), max_depth=3)
     sers, used = [], 0
@@ -25,7 +28,31 @@ def _tree_kv_last(seed: int, B: int, S: int) -> jnp.ndarray:
             sers.append(s)
             used += s.n
     tb = pack_trees(sers, S, batch_size=B)
-    return jnp.asarray(tb.kv_last)
+    return jnp.asarray(tb.kv_last), jnp.asarray(tb.pos_ids)
+
+
+def _tree_kv_last(seed: int, B: int, S: int) -> jnp.ndarray:
+    return _tree_meta(seed, B, S)[0]
+
+
+def _gateway_meta(seed: int, B: int, S: int, A: int, pad_rows=()):
+    """The exact gateway KV layout models/attention.py assembles: A
+    ancestor slots front-concatenated (always-visible kv_last = BIG,
+    front padding = −1 on selected rows), DFS indices offset by A, and
+    positions continuing the path (ancestors precede the local root)."""
+    kv_main, pos_main = _tree_meta(seed, B, S)
+    anc_kl = np.full((B, A), BIG, np.int64)
+    anc_valid = np.ones((B, A), bool)
+    for r, p in zip(range(B), pad_rows):
+        anc_kl[r, :p] = -1
+        anc_valid[r, :p] = False
+    kl_all = jnp.concatenate(
+        [jnp.asarray(anc_kl, jnp.int32),
+         jnp.where(kv_main >= 0, kv_main + A, -1)], axis=1)
+    anc_pos = jnp.broadcast_to(jnp.arange(A, dtype=jnp.int32), (B, A))
+    pos_q = (pos_main + A).astype(jnp.int32)
+    pos_k = jnp.concatenate([anc_pos, pos_q], axis=1)
+    return kl_all, pos_q, pos_k, jnp.asarray(anc_valid)
 
 
 def _rand(rng, shape, dtype):
@@ -102,6 +129,65 @@ def test_kernel_invalid_keys_never_attended():
     o = tree_attention(q, k, v, jnp.asarray(kv_last), hd ** -0.5, 16, 16)
     assert np.isfinite(np.asarray(o)).all()
     np.testing.assert_allclose(np.asarray(o[0, 16:]), 0.0, atol=1e-6)
+
+
+@pytest.mark.parametrize("A,pad_rows", [
+    (32, (0, 7)),     # MXU-aligned ancestor block, row 1 front-padded
+    (20, (5, 0)),     # awkward depth → ops.py back-pads KV to sublane 8
+])
+def test_kernel_gateway_ancestors_vs_ref(A, pad_rows):
+    """Front-concatenated ancestor KV (partition gateway) with per-row
+    front-padding valid masks matches the dense oracle."""
+    rng = np.random.default_rng(100 + A)
+    B, S, H, Kh, hd = 2, 64, 4, 2, 16
+    kl_all, _, _, _ = _gateway_meta(5, B, S, A, pad_rows)
+    q = _rand(rng, (B, S, H, hd), jnp.float32)
+    k = _rand(rng, (B, A + S, Kh, hd), jnp.float32)
+    v = _rand(rng, (B, A + S, Kh, hd), jnp.float32)
+    scale = hd ** -0.5
+    o = tree_attention(q, k, v, kl_all, scale, 32, 32, q_off=A)
+    o_ref = tree_attention_ref_ext(q, k, v, kl_all, scale, q_off=A)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_kernel_window_with_tree_branching_vs_ref():
+    """Sliding window (positions, not DFS indices) combined with tree
+    branching: the pallas path must apply the window term, and the result
+    must genuinely differ from the un-windowed one (mask has teeth)."""
+    rng = np.random.default_rng(23)
+    B, S, H, hd = 2, 128, 4, 16
+    kv_last, pos_ids = _tree_meta(11, B, S)
+    q = _rand(rng, (B, S, H, hd), jnp.float32)
+    k = _rand(rng, (B, S, H, hd), jnp.float32)
+    v = _rand(rng, (B, S, H, hd), jnp.float32)
+    scale = hd ** -0.5
+    o = tree_attention(q, k, v, kv_last, scale, 32, 32, window=8,
+                       pos_q=pos_ids, pos_k=pos_ids)
+    o_ref = tree_attention_ref_ext(q, k, v, kv_last, scale, window=8,
+                                   pos_q=pos_ids, pos_k=pos_ids)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                               atol=2e-5, rtol=2e-5)
+    o_full = tree_attention_ref_ext(q, k, v, kv_last, scale)
+    assert float(jnp.abs(o_ref - o_full).max()) > 1e-3
+
+
+def test_kernel_bf16_gqa_with_ancestors():
+    rng = np.random.default_rng(31)
+    B, S, A, H, Kh, hd = 1, 128, 32, 4, 2, 32
+    kl_all, pos_q, pos_k, _ = _gateway_meta(7, B, S, A, pad_rows=(9,))
+    q = _rand(rng, (B, S, H, hd), jnp.bfloat16)
+    k = _rand(rng, (B, A + S, Kh, hd), jnp.bfloat16)
+    v = _rand(rng, (B, A + S, Kh, hd), jnp.bfloat16)
+    scale = hd ** -0.5
+    o = tree_attention(q, k, v, kl_all, scale, 32, 32, q_off=A,
+                       window=16, pos_q=pos_q, pos_k=pos_k)
+    o_ref = tree_attention_ref_ext(q, k, v, kl_all, scale, q_off=A,
+                                   window=16, pos_q=pos_q, pos_k=pos_k)
+    tol = TOLS[jnp.bfloat16]
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32),
+                               atol=tol, rtol=tol)
 
 
 def test_kernel_grads_vs_ref():

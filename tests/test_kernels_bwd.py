@@ -11,11 +11,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from test_kernels import _gateway_meta, _tree_meta
+
 from repro.core.packing import pack_trees
 from repro.core.tree import serialize_tree
 from repro.data.synthetic import trees_for_batch
 from repro.kernels.ops import tree_attention
-from repro.kernels.ref import tree_attention_ref
+from repro.kernels.ref import tree_attention_ref, tree_attention_ref_ext
 from repro.kernels.tree_attention import tree_attention as raw_fwd
 from repro.kernels.tree_attention_bwd import tree_attention_bwd
 
@@ -152,6 +154,85 @@ def test_bwd_dtypes(dtype, tol):
         np.testing.assert_allclose(np.asarray(a, np.float32),
                                    np.asarray(b, np.float32),
                                    atol=tol, rtol=tol, err_msg=name)
+
+
+@pytest.mark.parametrize("A,pad_rows,window", [
+    (32, (0, 7), None),    # aligned ancestors, row-1 front padding
+    (20, (5, 0), None),    # awkward depth → KV back-pad path
+    (32, (4, 11), 12),     # ancestors + sliding window combined
+])
+def test_bwd_gateway_ancestors_vs_ref(A, pad_rows, window):
+    """Fused backward through the gateway layout: dq AND the ancestor
+    rows of dk/dv (d_extra_k/d_extra_v, rows [0, A)) match the oracle."""
+    rng = np.random.default_rng(200 + A + (window or 0))
+    B, S, H, Kh, hd = 2, 64, 4, 2, 16
+    kl_all, pos_q, pos_k, _ = _gateway_meta(5, B, S, A, pad_rows)
+    q = _rand(rng, (B, S, H, hd))
+    k = _rand(rng, (B, A + S, Kh, hd))
+    v = _rand(rng, (B, A + S, Kh, hd))
+    do = _rand(rng, (B, S, H, hd))
+    scale = hd ** -0.5
+    g = _grads(lambda q_, k_, v_:
+               tree_attention(q_, k_, v_, kl_all, scale, 32, 32, q_off=A,
+                              window=window, pos_q=pos_q, pos_k=pos_k),
+               q, k, v, do)
+    gr = _grads(lambda q_, k_, v_:
+                tree_attention_ref_ext(q_, k_, v_, kl_all, scale, q_off=A,
+                                       window=window, pos_q=pos_q,
+                                       pos_k=pos_k),
+                q, k, v, do)
+    for name, a, b in zip(("dq", "dk", "dv"), g, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-4, rtol=1e-4, err_msg=name)
+    # ancestor cotangents are real (nonzero) — the routing has something
+    # to carry back to the parent partition
+    assert float(jnp.abs(g[1][:, :A]).max()) > 1e-3
+    assert float(jnp.abs(g[2][:, :A]).max()) > 1e-3
+
+
+def test_bwd_window_with_tree_branching_vs_ref():
+    rng = np.random.default_rng(211)
+    B, S, H, hd = 2, 128, 4, 16
+    kv_last, pos_ids = _tree_meta(11, B, S)
+    q = _rand(rng, (B, S, H, hd))
+    k = _rand(rng, (B, S, H, hd))
+    v = _rand(rng, (B, S, H, hd))
+    do = _rand(rng, (B, S, H, hd))
+    scale = hd ** -0.5
+    g = _grads(lambda q_, k_, v_:
+               tree_attention(q_, k_, v_, kv_last, scale, 32, 32, window=8,
+                              pos_q=pos_ids, pos_k=pos_ids),
+               q, k, v, do)
+    gr = _grads(lambda q_, k_, v_:
+                tree_attention_ref_ext(q_, k_, v_, kv_last, scale,
+                                       window=8, pos_q=pos_ids,
+                                       pos_k=pos_ids),
+                q, k, v, do)
+    for name, a, b in zip(("dq", "dk", "dv"), g, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-4, rtol=1e-4, err_msg=name)
+
+
+def test_bwd_bf16_gqa_with_ancestors():
+    rng = np.random.default_rng(223)
+    B, S, A, H, Kh, hd = 1, 128, 32, 4, 2, 32
+    kl_all, pos_q, pos_k, _ = _gateway_meta(7, B, S, A, pad_rows=(9,))
+    q = _rand(rng, (B, S, H, hd), jnp.bfloat16)
+    k = _rand(rng, (B, A + S, Kh, hd), jnp.bfloat16)
+    v = _rand(rng, (B, A + S, Kh, hd), jnp.bfloat16)
+    do = _rand(rng, (B, S, H, hd), jnp.bfloat16)
+    scale = hd ** -0.5
+    g = _grads(lambda q_, k_, v_:
+               tree_attention(q_, k_, v_, kl_all, scale, 32, 32, q_off=A),
+               q, k, v, do)
+    gr = _grads(lambda q_, k_, v_:
+                tree_attention_ref_ext(q_, k_, v_, kl_all, scale, q_off=A),
+                q, k, v, do)
+    for name, a, b in zip(("dq", "dk", "dv"), g, gr):
+        assert a.dtype == jnp.bfloat16, name
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=5e-2, rtol=5e-2, err_msg=name)
 
 
 def test_bwd_direct_entry_point_matches_custom_vjp():

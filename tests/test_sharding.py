@@ -1,8 +1,16 @@
 """Sharding rules: per-tensor PartitionSpecs, divisibility fallbacks,
-FSDP second axis, batch specs.  Pure spec logic — no devices needed."""
+FSDP second axis, batch specs, and rule coverage over every param family
+(so a rule-regex typo fails CI instead of silently replicating a tensor).
+Pure spec logic — no devices needed."""
+import re
+
+import jax
+import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.sharding import param_spec
+from conftest import tiny_cfg
+from repro.models.model import init_params
+from repro.sharding import _RULES, _path_str, param_spec
 
 
 def test_attention_rules():
@@ -54,6 +62,54 @@ def test_ssm_rules_unfused():
                       "model", 1) == P(None, None, None)
     assert param_spec("layer_stacks/0/ssm/in_dt", (38, 2048, 64), 16,
                       "model", 1) == P(None, None, None)
+
+
+def test_mlp_bias_rule_matches():
+    # regression: the rule used to read r"mlp/b i$" (stray space) — the
+    # d_ff bias silently fell through to replication
+    assert param_spec("layer_stacks/0/mlp/bi", (24, 2816), 16,
+                      "model", 1) == P(None, "model")
+    assert param_spec("layer_stacks/0/mlp/bi", (24, 100), 16,
+                      "model", 1) == P(None, None)
+
+
+# Params that are *intentionally* replicated: norm scales, d_model-sized
+# biases, tiny per-head scalars, conv taps, rwkv6 mix/decay/lora tensors
+# (see the per-module init docstrings).  Anything matching neither a
+# _RULES entry nor this list is an unreviewed fall-through → test fails.
+_REPLICATE_ALLOWLIST = [
+    r"(^|/)(ln1|ln2|ln_x|final_norm|enc_norm|norm|ln_out|q_norm|k_norm)"
+    r"/scale$",
+    r"mlp/bo$",                                    # d_model bias
+    r"ssm/(conv_w|conv_b|A_log|D|dt_bias|a_bias)$",
+    r"tm/(mix|w0|w_lora_a|w_lora_b|u)$",           # rwkv6 timemix extras
+    r"cm/(mix|wr)$",                               # rwkv6 channelmix gate
+]
+
+_FAMILIES = ["dense", "moe", "ssm_rwkv6", "ssm_mamba2", "ssm_gdn",
+             "hybrid", "vlm", "audio"]
+
+
+@pytest.mark.parametrize("family", _FAMILIES)
+def test_every_param_matches_a_rule_or_allowlist(family):
+    """One config per family: every param path either hits a _RULES entry
+    or sits on the explicit replicate-allowlist — future rule typos (like
+    the mlp/bi one) fail here instead of silently replicating."""
+    kw = {"mlp_bias": True} if family == "dense" else {}
+    cfg = tiny_cfg(family, **kw)
+    params = init_params(cfg, jax.random.key(0))
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    orphans = set()
+    for path, _leaf in flat:
+        ps = _path_str(path)
+        ruled = any(re.search(pat, ps) for pat, _ in _RULES)
+        allowed = any(re.search(pat, ps) for pat in _REPLICATE_ALLOWLIST)
+        if not ruled and not allowed:
+            orphans.add(ps)
+    orphans = sorted(orphans)
+    assert not orphans, (
+        f"{family}: params match no sharding rule and are not on the "
+        f"replicate-allowlist: {orphans}")
 
 
 def test_norm_scales_replicated():
