@@ -19,6 +19,10 @@ the same rows as a JSON artifact for CI:
   gateway_impl       §3.3 — the same partitioned step with impl=pallas
                      (fused kernels on the gateway-extended KV layout)
                      vs impl=chunked (XLA scan fallback)
+  engine_step        §3.4 — one optimizer step over a mixed stream
+                     (packed rows + oversized trees) through the unified
+                     plan→execute TreeTrainEngine vs the pre-refactor
+                     two-branch loop; asserts ≤ 1 host sync per step
 
 Flags:
   --smoke      tiny qwen1.5-0.5B-scale config, CPU-interpret friendly,
@@ -369,6 +373,106 @@ def bench_gateway_impl(smoke: bool = False) -> None:
 
 
 # ---------------------------------------------------------------------------
+# unified plan→execute engine vs the PR-3 two-branch step
+# ---------------------------------------------------------------------------
+
+def bench_engine_step(smoke: bool = False, impl: str = "ref") -> None:
+    """One optimizer step over a mixed stream (packed rows + oversized
+    trees) through the unified TreeTrainEngine vs the pre-refactor
+    two-branch loop (jitted packed grad + wave driver + host-side
+    combine).  Also asserts the engine's host-sync discipline: ≤ 1
+    device→host sync per optimizer step."""
+    from repro.core.gateway import packed_partitioned_value_and_grad
+    from repro.data.loader import LoaderConfig, execution_plans, \
+        step_batches
+    from repro.train.engine import TreeTrainEngine
+    from repro.train.optimizer import (OptimizerConfig, adamw_update,
+                                       init_opt_state)
+    from repro.train.train_step import make_grad_fn
+
+    if smoke:
+        cfg = bench_model(n_layers=2, d_model=64)
+        S, C, steps = 128, 64, 3
+        gen = dict(turn_len_range=(8, 24), num_turns=3)
+    else:
+        cfg = bench_model(n_layers=2)
+        S, C, steps = 512, 256, 5
+        gen = dict(turn_len_range=(24, 96), num_turns=5)
+    lc = LoaderConfig(seq_len=S, batch_rows=2, trees_per_batch=4,
+                      mode="tree", kind="agentic", seed=11,
+                      auto_partition=True, capacity=C, gen_kwargs=gen)
+    opt_cfg = OptimizerConfig(lr=1e-3, warmup_steps=2, total_steps=steps)
+    params = init_params(cfg, jax.random.key(0))
+
+    plans = [p for p in execution_plans(cfg, lc, steps) if not p.is_empty]
+    sbs = [sb for sb in step_batches(cfg, lc, steps)
+           if sb.inputs is not None or sb.oversized]
+    n_oversized = sum(p.num_oversized for p in plans)
+
+    # ---- unified engine ---------------------------------------------------
+    # warm pass over EVERY plan first: each step can carry differently
+    # bucketed wave shapes, and compilation must stay out of the timing
+    engine = TreeTrainEngine(cfg, opt_cfg, impl=impl, donate=False)
+    opt = init_opt_state(params)
+    p_e = params
+    for plan in plans:
+        p_e, opt, _ = engine.step(p_e, opt, plan)
+    syncs0, steps0 = engine.host_syncs, engine.steps_done
+    opt = init_opt_state(params)
+    p_e = params
+    t0 = time.perf_counter()
+    loss_e = 0.0
+    for plan in plans:
+        p_e, opt, m = engine.step(p_e, opt, plan)
+        loss_e = m["loss"]
+    t_engine = (time.perf_counter() - t0) / len(plans)
+    syncs_per_step = (engine.host_syncs - syncs0) / (engine.steps_done
+                                                     - steps0)
+    assert syncs_per_step <= 1.0, syncs_per_step
+
+    # ---- pre-refactor two-branch loop ------------------------------------
+    gfn = make_grad_fn(cfg, impl=impl)
+    update_fn = jax.jit(lambda p, g, s: adamw_update(opt_cfg, p, g, s))
+    cap = lc.capacity or lc.seq_len
+
+    def two_branch(p, opt, sb):
+        n = max(sb.num_trees, 1)
+        loss, grads = 0.0, None
+        if sb.inputs is not None:
+            sb.inputs["num_trees"] = n
+            li, grads, _ = gfn(p, sb.inputs)
+            loss += float(li)
+        if sb.oversized:
+            l_p, g_p, _ = packed_partitioned_value_and_grad(
+                cfg, p, sb.oversized, cap, seq_len=lc.seq_len, impl=impl,
+                max_rows=lc.batch_rows)
+            loss += l_p / n
+            g_p = jax.tree.map(lambda a: a / n, g_p)
+            grads = g_p if grads is None else jax.tree.map(
+                lambda a, b: a.astype(jnp.float32) + b, grads, g_p)
+        p, opt, om = update_fn(p, grads, opt)
+        return p, opt, loss
+
+    opt = init_opt_state(params)
+    p_r = params
+    for sb in sbs:                                      # warm executables
+        p_r, opt, _ = two_branch(p_r, opt, sb)
+    opt = init_opt_state(params)
+    p_r = params
+    t0 = time.perf_counter()
+    loss_r = 0.0
+    for sb in sbs:
+        p_r, opt, loss_r = two_branch(p_r, opt, sb)
+    t_two = (time.perf_counter() - t0) / len(sbs)
+
+    emit("engine_step", t_engine * 1e6,
+         f"two_branch_us={t_two * 1e6:.1f} "
+         f"speedup={t_two / t_engine:.2f}x steps={len(plans)} "
+         f"oversized={n_oversized} host_syncs_per_step={syncs_per_step:.1f} "
+         f"loss_rel={abs(loss_e - loss_r) / max(abs(loss_r), 1e-9):.1e}")
+
+
+# ---------------------------------------------------------------------------
 # --smoke — tiny model fwd+bwd through the packed tree loss (CI gate)
 # ---------------------------------------------------------------------------
 
@@ -415,6 +519,7 @@ def main(argv=None) -> None:
         bench_kernel_blocks()
         bench_packed_partition(smoke=True)
         bench_gateway_impl(smoke=True)
+        bench_engine_step(smoke=True, impl=args.impl)
     else:
         bench_por_sweep(args.impl)
         bench_partition_tokens()
@@ -425,6 +530,7 @@ def main(argv=None) -> None:
         bench_kernel_fwd_bwd()
         bench_packed_partition()
         bench_gateway_impl()
+        bench_engine_step(impl=args.impl)
     if args.out:
         artifact = {
             "smoke": args.smoke,

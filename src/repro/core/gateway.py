@@ -12,12 +12,18 @@ closures along one root-to-leaf partition path (the paper's memory
 bound).  Gateway cotangents are accumulated in float32 before the parent
 vjp call (App. B.5's accumulator, the natural JAX idiom).
 
-Two drivers share the plumbing:
+This module is the host-side *planner* plus the per-partition device
+primitives; three entry points share the plumbing:
   ``partitioned_value_and_grad``        one tree, depth-first B=1
                                         recursion (strict path bound);
-  ``packed_partitioned_value_and_grad`` many trees, wave-scheduled
-                                        batched rows (the training
-                                        pipeline, paper §3.4).
+  ``build_partition_plan``              many trees → a ``PartitionPlan``
+                                        (per-wave numpy batches, capture
+                                        plans, gateway topology) that the
+                                        unified engine executes
+                                        (train/engine.run_partition_plan);
+  ``packed_partitioned_value_and_grad`` thin compatibility wrapper:
+                                        build the plan, run it through
+                                        the engine executor.
 
 The gateway is *ancestor-compacted*: we gather exactly the ancestor-token
 rows host-side instead of slicing ``[:past_len+e]`` + a −∞ bias
@@ -26,6 +32,7 @@ rows host-side instead of slicing ``[:past_len+e]`` + a −∞ bias
 """
 from __future__ import annotations
 
+from dataclasses import dataclass, field
 from typing import Any, Optional
 
 import jax
@@ -344,12 +351,14 @@ def partitioned_value_and_grad(
 
 
 # ---------------------------------------------------------------------------
-# Batched wave-scheduled driver (Tree Packing over partitions, §3.3–3.4)
+# Batched wave-scheduled planning (Tree Packing over partitions, §3.3–3.4)
 #
 # The recursive driver above runs one partition at a time (B=1).  Training
 # needs the transpose: MANY trees' partitions per step, batched.  The wave
 # scheduler packs every partition of every tree into per-wave [B, S] rows
-# (core/packing.pack_partition_waves) and runs
+# (core/packing.pack_partition_waves); ``build_partition_plan`` turns that
+# into a pure-host PartitionPlan, and the engine's executor
+# (train/engine.run_partition_plan) runs
 #
 #   forward  waves 0..W−1: each wave is ONE jitted call; a child's gateway
 #            is assembled per row from its parent's captures (the parent is
@@ -532,37 +541,68 @@ def _embed_cut_cot(cot_caps: dict, cot_view: dict, cname: str, r: int
                         tgt[leaf] = emb_tok(tgt[leaf], c[leaf])
 
 
-def packed_partitioned_value_and_grad(
+@dataclass
+class GatewayRef:
+    """Where one gateway-bearing fragment's parent captures live: wave
+    index, cut index within that wave (cname = f"c{cut}"), the parent's
+    row, and the real (unpadded) captured path length."""
+    wave: int
+    cut: int
+    row: int
+    path_len: int
+
+
+@dataclass
+class WavePlan:
+    """Host-side plan for ONE wave: fixed-shape numpy batch columns (rows
+    already padded to the pow2 bucket), bucketed capture plans, and the
+    gateway topology — everything the executor needs except the runtime
+    capture tensors themselves."""
+    batch: dict[str, np.ndarray]          # [Bb, S] columns (+anc_*, extra_*)
+    capspecs: dict                        # bucketed runtime index arrays
+    has_gw: bool
+    num_rows: int                         # real rows (before pow2 padding)
+    parents: list[GatewayRef] = field(default_factory=list)  # per slot
+    slot_rows: list[int] = field(default_factory=list)       # slot → row
+    A_real: list[int] = field(default_factory=list)          # per real row
+    anc_A_max: int = 0                    # bucketed ancestor length
+    anc_pos_rows: list[np.ndarray] = field(default_factory=list)
+
+
+@dataclass
+class PartitionPlan:
+    """Plan for the partitioned share of one step: waves in topological
+    order (parents strictly earlier), ready for the engine's forward and
+    backward sweeps (train/engine.run_partition_plan)."""
+    waves: list[WavePlan]
+    num_trees: int
+    info: dict
+
+
+def build_partition_plan(
     cfg: ModelConfig,
-    params: dict,
     trees: list[TrajectoryTree],
     capacity: int,
     *,
     seq_len: Optional[int] = None,
-    impl: str = "ref",
     loss_mode: str = "sep_avg",
     max_rows: Optional[int] = None,
-) -> tuple[float, dict, dict]:
-    """Loss-*sum* + grads for MANY trees via wave-scheduled Tree Packing
-    over partitions — the batched training-pipeline form of
-    ``partitioned_value_and_grad``.  Every token of every tree is computed
-    exactly once, with ≤ ``seq_len`` tokens per row and one jitted
-    fwd / one jitted bwd call per wave.  ``max_rows`` caps every wave's
-    row count (too-wide waves split), bounding per-wave activation
-    residency to a ``max_rows × seq_len`` step like the packed path's
-    row budget.
+) -> PartitionPlan:
+    """Plan (host-side only) the wave-scheduled partitioned execution of
+    MANY oversized trees: partition each tree, pack every partition into
+    per-wave [B, S] rows, pad/bucket every shape, precompute ancestor
+    positions and capture plans, and record the gateway topology.
 
-    Returns ``(loss_sum, grads (float32), info)``; divide by the number of
-    trees to match ``loss_and_metrics``'s mean-over-trees normalizer."""
+    No device work happens here — the plan is pure numpy + static
+    metadata.  ``train/engine.py`` executes it (one jitted forward and one
+    jitted remat-backward per wave, gradients accumulated on-device)."""
     chunk_size = cfg.ssm.chunk_size if needs_chunks(cfg) else None
     seq_len = capacity if seq_len is None else seq_len
     assert capacity <= seq_len, (capacity, seq_len)
     taps = max(1, max_conv_taps(cfg))
-    grads_acc = jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32),
-                             params)
     info: dict[str, Any] = {"num_trees": len(trees)}
     if not trees:
-        return 0.0, grads_acc, info
+        return PartitionPlan(waves=[], num_trees=0, info=info)
 
     forest = [partition_tree(t, capacity, chunk_size=chunk_size,
                              loss_mode=loss_mode) for t in trees]
@@ -581,27 +621,22 @@ def packed_partitioned_value_and_grad(
                 unique_tokens=sum(int(p.ser.valid.sum())
                                   for ps in forest for p in ps))
 
-    # ---- forward sweep, wave order ---------------------------------------
-    st: list[dict] = []
-    total_loss = jnp.zeros((), jnp.float32)
-    total_weight = jnp.zeros((), jnp.float32)
-    total_nll = jnp.zeros((), jnp.float32)
+    plans: list[WavePlan] = []
     for w, wv in enumerate(waves):
         B, Bb = wv.num_rows, _pow2(wv.num_rows)
         a = wv.arrays
         prev_np = _pad_rows(a["prev_idx"], Bb, -1)
         batch = {
-            "tokens": jnp.asarray(_pad_rows(a["tokens"], Bb, 0)),
-            "pos_ids": jnp.asarray(_pad_rows(a["pos_ids"], Bb, 0)),
-            "kv_last": jnp.asarray(_pad_rows(a["kv_last"], Bb, -1)),
-            "weight": jnp.asarray(_pad_rows(a["weight"], Bb, 0)),
-            "prev_idx": jnp.asarray(prev_np),
-            "valid": jnp.asarray(_pad_rows(a["valid"], Bb, False)),
+            "tokens": _pad_rows(a["tokens"], Bb, 0),
+            "pos_ids": _pad_rows(a["pos_ids"], Bb, 0),
+            "kv_last": _pad_rows(a["kv_last"], Bb, -1),
+            "weight": _pad_rows(a["weight"], Bb, 0),
+            "prev_idx": prev_np,
+            "valid": _pad_rows(a["valid"], Bb, False),
         }
         if chunk_size is not None:
-            batch["chunk_parent"] = jnp.asarray(
-                _pad_rows(a["chunk_parent"], Bb, -1))
-            batch["prev_pows"] = jnp.asarray(prev_powers(prev_np, taps))
+            batch["chunk_parent"] = _pad_rows(a["chunk_parent"], Bb, -1)
+            batch["prev_pows"] = prev_powers(prev_np, taps)
         if wv.cuts:
             Eb = _pow2(max(sum(1 for c in wv.cuts if c.row == r)
                            for r in range(B)))
@@ -615,34 +650,29 @@ def packed_partitioned_value_and_grad(
                 pos[c.row, j] = c.boundary_pos
                 lab[c.row, j] = c.boundary_label
                 wgt[c.row, j] = c.boundary_weight
-            batch["extra_pos"] = jnp.asarray(pos)
-            batch["extra_label"] = jnp.asarray(lab)
-            batch["extra_weight"] = jnp.asarray(wgt)
+            batch["extra_pos"] = pos
+            batch["extra_label"] = lab
+            batch["extra_weight"] = wgt
         capspecs = _wave_capspecs(cfg, wv.cuts, taps)
 
-        gw = None
-        A_real: list[int] = []
-        anc_pos_rows: list[np.ndarray] = \
-            [np.zeros((0,), np.int32) for _ in range(B)]
         # waves are depth-homogeneous: either all root fragments (no
         # gateway) or all gateway-bearing; parents may sit several waves
         # back once a too-wide depth level is split under max_rows
         has_gw = forest[wv.slots[0].tree][wv.slots[0].pid].parent_pid >= 0
+        parents: list[GatewayRef] = []
+        A_real: list[int] = []
+        A_max = 0
+        anc_pos_rows: list[np.ndarray] = \
+            [np.zeros((0,), np.int32) for _ in range(B)]
         if has_gw:
-            rows_gw = []
             anc_pos_rows = []
             for sl in wv.slots:
                 wp, ci = cut_of_child[(sl.tree, sl.pid)]
-                stp, c = st[wp], waves[wp].cuts[ci]
-                cname = f"c{ci}"
-                p_gw_row = None if stp["gw"] is None else _slice_gw_row(
-                    stp["gw"], c.row, stp["A_real"][c.row])
-                caps_view = _cut_caps_view(cfg, stp["caps"], cname,
-                                           c.row, len(c.path_idx))
-                rows_gw.append(
-                    assemble_child_gw(cfg, p_gw_row, caps_view, cname))
+                c = waves[wp].cuts[ci]
+                parents.append(GatewayRef(wave=wp, cut=ci, row=c.row,
+                                          path_len=len(c.path_idx)))
                 anc_pos_rows.append(np.concatenate(
-                    [stp["anc_pos"][c.row],
+                    [plans[wp].anc_pos_rows[c.row],
                      waves[wp].arrays["pos_ids"][c.row, c.path_idx]]
                 ).astype(np.int32))
                 assert len(anc_pos_rows[-1]) == \
@@ -652,69 +682,63 @@ def packed_partitioned_value_and_grad(
             # pallas kernels get an MXU-friendly front-padded KV extension
             # (the chunked path is indifferent; padded slots are masked)
             A_max = _pow2(max(A_real), lo=8)
-            gw = _stack_gw_rows(rows_gw, A_max, Bb)
             anc_pos = np.zeros((Bb, A_max), np.int32)
             anc_valid = np.zeros((Bb, A_max), bool)
             for r, p in enumerate(anc_pos_rows):
                 anc_pos[r, A_max - len(p):] = p
                 anc_valid[r, A_max - len(p):] = True
-            batch["anc_pos"] = jnp.asarray(anc_pos)
-            batch["anc_valid"] = jnp.asarray(anc_valid)
+            batch["anc_pos"] = anc_pos
+            batch["anc_valid"] = anc_valid
 
-        fwd, _ = _part_fns(cfg, _names_sig(capspecs), impl, has_gw)
-        (loss, caps), metrics = fwd(params, batch, gw, capspecs)
-        total_loss = total_loss + loss.astype(jnp.float32)
-        total_weight = total_weight + \
-            metrics["weight_sum"].astype(jnp.float32)
-        total_nll = total_nll + metrics["nll_sum"].astype(jnp.float32)
-        st.append(dict(batch=batch, gw=gw, capspecs=capspecs, caps=caps,
-                       A_real=A_real, anc_pos=anc_pos_rows,
-                       has_gw=has_gw, cot_gw=None, cot_cut={}))
+        plans.append(WavePlan(batch=batch, capspecs=capspecs,
+                              has_gw=has_gw, num_rows=B, parents=parents,
+                              slot_rows=[sl.row for sl in wv.slots],
+                              A_real=A_real, anc_A_max=A_max,
+                              anc_pos_rows=anc_pos_rows))
 
-    # ---- backward sweep, reverse wave order ------------------------------
-    for w in reversed(range(len(waves))):
-        s, wv = st[w], waves[w]
-        cot_caps = jax.tree.map(jnp.zeros_like, s["caps"])
-        for cname, (r, cot_view) in s["cot_cut"].items():
-            _embed_cut_cot(cot_caps, cot_view, cname, r)
-        _, bwd = _part_fns(cfg, _names_sig(s["capspecs"]), impl,
-                           s["has_gw"])
-        g_params, g_gw = bwd(params, s["batch"], s["gw"], s["capspecs"],
-                             (jnp.ones((), jnp.float32), cot_caps))
-        grads_acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
-                                 grads_acc, g_params)
-        if not s["has_gw"]:
-            continue
-        if s["cot_gw"] is not None:
-            g_gw = jax.tree.map(
-                lambda a, b: a.astype(jnp.float32) + b, g_gw, s["cot_gw"])
-        for sl in wv.slots:
-            wp, ci = cut_of_child[(sl.tree, sl.pid)]
-            stp, c = st[wp], waves[wp].cuts[ci]
-            cname = f"c{ci}"
-            cot_child_row = _slice_gw_row(g_gw, sl.row,
-                                          s["A_real"][sl.row])
-            p_gw_row = None if stp["gw"] is None else _slice_gw_row(
-                stp["gw"], c.row, stp["A_real"][c.row])
-            caps_view = _cut_caps_view(cfg, stp["caps"], cname, c.row,
-                                       len(c.path_idx))
-            cot_gw_row = None if p_gw_row is None else jax.tree.map(
-                lambda a: jnp.zeros(a.shape, jnp.float32), p_gw_row)
-            cot_caps_row = jax.tree.map(jnp.zeros_like, caps_view)
-            route_child_cot(cfg, p_gw_row, caps_view, cname,
-                            cot_child_row, cot_gw_row, cot_caps_row)
-            if cot_gw_row is not None:
-                if stp["cot_gw"] is None:
-                    stp["cot_gw"] = jax.tree.map(
-                        lambda a: jnp.zeros(a.shape, jnp.float32),
-                        stp["gw"])
-                stp["cot_gw"] = _embed_gw_row_cot(stp["cot_gw"],
-                                                  cot_gw_row, c.row)
-            stp["cot_cut"][cname] = (c.row, cot_caps_row)
+    return PartitionPlan(waves=plans, num_trees=len(trees), info=info)
 
+
+def packed_partitioned_value_and_grad(
+    cfg: ModelConfig,
+    params: dict,
+    trees: list[TrajectoryTree],
+    capacity: int,
+    *,
+    seq_len: Optional[int] = None,
+    impl: str = "ref",
+    loss_mode: str = "sep_avg",
+    max_rows: Optional[int] = None,
+) -> tuple[float, dict, dict]:
+    """Loss-*sum* + grads for MANY trees via wave-scheduled Tree Packing
+    over partitions — thin compatibility wrapper: builds a PartitionPlan
+    and executes it through the unified engine's wave executor
+    (``train/engine.run_partition_plan``).  Every token of every tree is
+    computed exactly once, with ≤ ``seq_len`` tokens per row and one
+    jitted fwd / one jitted bwd call per wave.  ``max_rows`` caps every
+    wave's row count (too-wide waves split), bounding per-wave activation
+    residency to a ``max_rows × seq_len`` step like the packed path's
+    row budget.
+
+    Returns ``(loss_sum, grads (float32), info)``; divide by the number of
+    trees to match ``loss_and_metrics``'s mean-over-trees normalizer."""
+    from repro.train.engine import run_partition_plan
+
+    plan = build_partition_plan(cfg, trees, capacity, seq_len=seq_len,
+                                loss_mode=loss_mode, max_rows=max_rows)
+    grads_acc = jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32),
+                             params)
+    if not plan.waves:
+        return 0.0, grads_acc, plan.info
+    scal = jnp.zeros((3,), jnp.float32)
+    grads_acc, scal = run_partition_plan(
+        cfg, params, plan, grads_acc, scal, impl=impl,
+        loss_scale=jnp.ones((), jnp.float32), donate=False)
     # one host sync point for the scalars (loss reporting + per-token nll)
-    info["weight_sum"] = float(total_weight)
-    info["nll_sum"] = float(total_nll)
+    total_loss, nll_sum, weight_sum = np.asarray(scal)
+    info = dict(plan.info)
+    info["weight_sum"] = float(weight_sum)
+    info["nll_sum"] = float(nll_sum)
     return float(total_loss), grads_acc, info
 
 

@@ -161,20 +161,33 @@ def pack_linear_paths(
     *,
     batch_size: Optional[int] = None,
     chunk_size: Optional[int] = None,
+    loss_mode: str = "sep_avg",
 ) -> TreeBatch:
     """Baseline: pack *linearized per-branch sequences* (Eq. 7 serialization
     + standard sequence packing).  ``trees_paths[k]`` is the list of path
     dicts of tree k (from ``TrajectoryTree.linearize_paths``).  Loss weights
     are 1/K_k per trained token so the packed loss equals mean-over-trees of
     sep-avg — directly comparable with the tree-packed loss.
+
+    loss_mode 'rl' additionally scales every path by its per-branch GRPO
+    advantage (``branch_adv`` from ``linearize_paths``) — the dense
+    per-path form of the RL model-update objective; 'uniform' drops the
+    1/K normalizer (each replicated trained token weighs 1).
     """
     flat: list[dict[str, np.ndarray]] = []
     for ti, paths in enumerate(trees_paths):
         K = len(paths)
         for p in paths:
             q = dict(p)
-            q["_w"] = np.where(p["trained"], p["advantage"] / K,
-                               0.0).astype(np.float32)
+            if loss_mode == "sep_avg":
+                w = p["advantage"] / K
+            elif loss_mode == "uniform":
+                w = p["advantage"]
+            elif loss_mode == "rl":
+                w = p["advantage"] * p.get("branch_adv", 1.0) / K
+            else:
+                raise ValueError(loss_mode)
+            q["_w"] = np.where(p["trained"], w, 0.0).astype(np.float32)
             q["_tree"] = ti
             flat.append(q)
 

@@ -27,8 +27,8 @@ from typing import Optional
 
 import numpy as np
 
-from .tree import (SerializedTree, TrajectoryTree, TreeNode, _leaf_counts,
-                   serialize_tree)
+from .tree import (SerializedTree, TrajectoryTree, TreeNode,
+                   _branch_adv_sums, _leaf_counts, serialize_tree)
 
 
 def split_long_nodes(tree: TrajectoryTree, max_len: int) -> TrajectoryTree:
@@ -39,7 +39,7 @@ def split_long_nodes(tree: TrajectoryTree, max_len: int) -> TrajectoryTree:
         children = [rec(c) for c in n.children]
         if n.size <= max_len:
             m = TreeNode(tokens=n.tokens, trained=n.trained,
-                         advantage=n.advantage)
+                         advantage=n.advantage, branch_adv=n.branch_adv)
             m.children = children
             return m
         head: Optional[TreeNode] = None
@@ -48,7 +48,8 @@ def split_long_nodes(tree: TrajectoryTree, max_len: int) -> TrajectoryTree:
             e = min(s + max_len, n.size)
             piece = TreeNode(tokens=n.tokens[s:e], trained=n.trained[s:e],
                              advantage=None if n.advantage is None
-                             else n.advantage[s:e])
+                             else n.advantage[s:e],
+                             branch_adv=n.branch_adv)
             if head is None:
                 head = piece
             else:
@@ -112,8 +113,13 @@ def partition_tree(
     K = g[id(tree.root)]
     if loss_mode == "uniform":
         lam_map = {nid: 1.0 for nid in g}
-    else:
+    elif loss_mode == "rl":
+        lam_map = {nid: a / K
+                   for nid, a in _branch_adv_sums(tree.root).items()}
+    elif loss_mode == "sep_avg":
         lam_map = {nid: gn / K for nid, gn in g.items()}
+    else:
+        raise ValueError(loss_mode)
 
     padded = {id(n): _chunk_pad(n.size, chunk_size)
               for n in tree.nodes()}
@@ -154,7 +160,7 @@ def partition_tree(
 
         def prune(n: TreeNode) -> TreeNode:
             m = TreeNode(tokens=n.tokens, trained=n.trained,
-                         advantage=n.advantage)
+                         advantage=n.advantage, branch_adv=n.branch_adv)
             lam_local[id(m)] = lam_map[id(n)]
             for c in n.children:
                 if id(c) in cut:

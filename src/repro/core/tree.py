@@ -37,6 +37,11 @@ class TreeNode:
     trained: Optional[np.ndarray] = None    # bool  [len]; True = model output (gets loss)
     advantage: Optional[np.ndarray] = None  # f32   [len]; RL per-token advantage
     children: list["TreeNode"] = field(default_factory=list)
+    # GRPO-style per-*branch* advantage: meaningful on leaves (a branch is
+    # one root-to-leaf trajectory); None = 1.0.  Under loss_mode="rl" a
+    # shared token's weight is Σ_{branches through it} A_b / K, which with
+    # A≡1 reduces bit-exactly to sep_avg (g_t / K).
+    branch_adv: Optional[float] = None
 
     def __post_init__(self) -> None:
         self.tokens = np.asarray(self.tokens, dtype=np.int32)
@@ -107,7 +112,11 @@ class TrajectoryTree:
         return out
 
     def linearize_paths(self) -> list[dict[str, np.ndarray]]:
-        """Per-branch baseline: one linear sequence per root-to-leaf path."""
+        """Per-branch baseline: one linear sequence per root-to-leaf path.
+
+        Each path dict also carries ``branch_adv`` — the leaf's per-branch
+        RL advantage (1.0 when unset) — so baseline packers can reproduce
+        the GRPO-weighted objective per replicated branch."""
         seqs = []
         for path in self.paths():
             toks = np.concatenate([n.tokens for n in path])
@@ -115,8 +124,12 @@ class TrajectoryTree:
             adv = (np.concatenate([
                 n.advantage if n.advantage is not None
                 else np.ones(n.size, np.float32) for n in path]))
+            leaf = path[-1]
             seqs.append(dict(tokens=toks, trained=trained, advantage=adv,
-                             pos_ids=np.arange(toks.shape[0], dtype=np.int32)))
+                             pos_ids=np.arange(toks.shape[0],
+                                               dtype=np.int32),
+                             branch_adv=float(leaf.branch_adv)
+                             if leaf.branch_adv is not None else 1.0))
         return seqs
 
 
@@ -185,6 +198,28 @@ def _leaf_counts(root: TreeNode) -> dict[int, int]:
     return g
 
 
+def _branch_adv_sums(root: TreeNode) -> dict[int, float]:
+    """Σ of per-branch advantages over the leaves under each node.
+
+    The RL analogue of ``_leaf_counts``: the GRPO objective
+    (1/K) Σ_k A_k Σ_{t∈path k} nll_t gives a shared token the coefficient
+    Σ_{branches through it} A_b / K.  A leaf with ``branch_adv=None``
+    counts as 1.0, so a tree with no advantages sums to exactly g_n."""
+    s: dict[int, float] = {}
+
+    def rec(n: TreeNode) -> float:
+        if not n.children:
+            a = 1.0 if n.branch_adv is None else float(n.branch_adv)
+            s[id(n)] = a
+            return a
+        tot = sum(rec(c) for c in n.children)
+        s[id(n)] = tot
+        return tot
+
+    rec(root)
+    return s
+
+
 def serialize_tree(
     tree: TrajectoryTree,
     *,
@@ -200,7 +235,11 @@ def serialize_tree(
       chunk_size so SSM chunk boundaries coincide with node boundaries
       (pad tokens are ``valid=False`` and inert everywhere).
     loss_mode: 'sep_avg' → λ_t = g_t/K (Eq. 4); 'uniform' → λ_t = 1 for
-      every unique trained token (§3.1's alternative objective).
+      every unique trained token (§3.1's alternative objective);
+      'rl' → λ_t = Σ_{branches through t} A_b / K — the GRPO model-update
+      objective with per-branch advantages (``TreeNode.branch_adv`` on
+      leaves).  With A≡1 the branch sum equals g_t exactly, so 'rl'
+      reduces bit-for-bit to 'sep_avg'.
 
     Partition-mode extras (core/partition.py):
       lam_map    : id(node) → λ computed on the *full* tree (a pruned
@@ -212,6 +251,7 @@ def serialize_tree(
     """
     g = _leaf_counts(tree.root)
     K = g[id(tree.root)]
+    adv_sum = _branch_adv_sums(tree.root) if loss_mode == "rl" else None
 
     toks: list[np.ndarray] = []
     pos: list[np.ndarray] = []
@@ -256,6 +296,8 @@ def serialize_tree(
             lam = g[id(node)] / K
         elif loss_mode == "uniform":
             lam = 1.0
+        elif loss_mode == "rl":
+            lam = adv_sum[id(node)] / K
         else:
             raise ValueError(loss_mode)
         adv = (node.advantage if node.advantage is not None
@@ -263,9 +305,12 @@ def serialize_tree(
         w = np.where(node.trained, lam * adv, 0.0).astype(np.float32)
         wgt.append(np.concatenate([w, np.zeros(P, np.float32)]))
         # prev index: within node = previous DFS slot; first token looks at
-        # the parent node's last *real* token.
+        # the parent node's last *real* token.  Empty nodes (L=0, e.g. the
+        # empty leaf of a duplicated/prefix rollout branch) contribute no
+        # tokens but still count as a leaf for λ.
         p = np.arange(start - 1, start + L - 1, dtype=np.int32)
-        p[0] = parent_last_tok
+        if L > 0:
+            p[0] = parent_last_tok
         prv.append(np.concatenate([p, np.full(P, -1, np.int32)]))
         vld.append(np.concatenate([np.ones(L, bool), np.zeros(P, bool)]))
         nid.append(np.full(L + P, my_nid, np.int32))

@@ -10,9 +10,13 @@ Two modes behind one iterator:
 
 With ``auto_partition`` on (tree mode), trees whose serialization exceeds
 one row are no longer dropped: they ride along each step as ``oversized``
-and train through the wave-scheduled partitioned driver
-(core/gateway.packed_partitioned_value_and_grad) — zero data loss, every
-token computed exactly once under the ``capacity`` memory cap.
+and train through the wave-scheduled partition plan
+(core/gateway.build_partition_plan) — zero data loss, every token
+computed exactly once under the ``capacity`` memory cap.
+
+``execution_plans`` is the unified-engine interface: it folds the packed
+rows and the partition waves of each step into ONE ``ExecutionPlan`` for
+``train/engine.TreeTrainEngine.step``.
 """
 from __future__ import annotations
 
@@ -54,18 +58,36 @@ class StepBatch:
     num_trees: int = 0                  # packed + oversized (normalizer)
 
 
+@dataclass
+class _FitTree:
+    """One row-sized tree with its serialization artifacts, computed ONCE
+    (the size filter and the packer used to serialize the same tree twice,
+    and the does-not-fit retry loop re-serialized on every attempt)."""
+    tree: TrajectoryTree
+    ser: object                       # SerializedTree (loss_mode applied)
+    paths: list[dict]                 # linearize_paths() output
+    n_unique: int
+
+
 def _fit_trees(trees: Sequence[TrajectoryTree], seq_len: int,
-               chunk: Optional[int]):
-    """Split trees into (fits-one-row, oversized).  The filter checks BOTH
-    serializations so tree and baseline modes see the exact same dataset —
-    step-wise loss comparisons stay pure."""
+               chunk: Optional[int], loss_mode: str = "sep_avg"):
+    """Split trees into (fits-one-row ``_FitTree``s, oversized trees).
+    The filter checks BOTH serializations so tree and baseline modes see
+    the exact same dataset — step-wise loss comparisons stay pure.  Each
+    kept tree carries its serialization and linearized paths so callers
+    never re-serialize."""
     keep, oversized = [], []
     for t in trees:
-        n_tree = serialize_tree(t, chunk_size=chunk).n
-        n_path = max(len(p["tokens"]) for p in t.linearize_paths())
+        ser = serialize_tree(t, chunk_size=chunk, loss_mode=loss_mode)
+        paths = t.linearize_paths()
+        n_path = max(len(p["tokens"]) for p in paths)
         if chunk:
             n_path = ((n_path + chunk - 1) // chunk) * chunk
-        (keep if max(n_tree, n_path) <= seq_len else oversized).append(t)
+        if max(ser.n, n_path) <= seq_len:
+            keep.append(_FitTree(tree=t, ser=ser, paths=paths,
+                                 n_unique=t.num_unique_tokens()))
+        else:
+            oversized.append(t)
     return keep, oversized
 
 
@@ -83,34 +105,34 @@ def step_batches(cfg: ModelConfig, lc: LoaderConfig,
         trees = trees_for_batch(lc.seed * 100_003 + b,
                                 n_trees=lc.trees_per_batch, kind=lc.kind,
                                 **gk)
-        trees, oversized = _fit_trees(trees, lc.seq_len, chunk)
+        fits, oversized = _fit_trees(trees, lc.seq_len, chunk,
+                                     lc.loss_mode)
         dropped = 0 if route else len(oversized)
         # move the largest trees out until the pack fits the row budget;
         # only the explicit does-not-fit error is recoverable — anything
-        # else is a packer bug and propagates
-        trees = sorted(trees, key=lambda t: t.num_unique_tokens())
+        # else is a packer bug and propagates.  Serializations were
+        # computed once in _fit_trees; each retry just pops the largest.
+        fits = sorted(fits, key=lambda f: f.n_unique)
         tb = None
-        while trees:
+        while fits:
             try:
                 if lc.mode == "tree":
-                    tb = pack_trees(
-                        [serialize_tree(t, chunk_size=chunk,
-                                        loss_mode=lc.loss_mode)
-                         for t in trees],
-                        lc.seq_len, batch_size=lc.batch_rows,
-                        chunk_size=chunk)
+                    tb = pack_trees([f.ser for f in fits],
+                                    lc.seq_len, batch_size=lc.batch_rows,
+                                    chunk_size=chunk)
                 else:
                     tb = pack_linear_paths(
-                        [t.linearize_paths() for t in trees],
+                        [f.paths for f in fits],
                         lc.seq_len, batch_size=lc.batch_rows,
-                        chunk_size=chunk)
+                        chunk_size=chunk, loss_mode=lc.loss_mode)
                 break
             except DoesNotFitError:
                 if route:
-                    oversized.append(trees[-1])
+                    oversized.append(fits[-1].tree)
                 else:
                     dropped += 1
-                trees = trees[:-1]
+                fits = fits[:-1]
+        trees = [f.tree for f in fits]
         if not route:
             oversized = []
         if tb is None and not oversized and dropped == 0:
@@ -122,7 +144,12 @@ def step_batches(cfg: ModelConfig, lc: LoaderConfig,
                 extra = rng.normal(
                     size=(tb.tokens.shape[0], cfg.frontend_len,
                           cfg.d_model)).astype(np.float32)
-            inputs = prepare_batch(cfg, tb, extra)
+            # normalize by the step's FULL tree count: oversized trees on
+            # the partition waves share this step's mean-over-trees loss
+            inputs = prepare_batch(
+                cfg, tb, extra,
+                num_trees=len(trees) + len(oversized) if oversized
+                else None)
         yield StepBatch(inputs=inputs, tb=tb, oversized=oversized,
                         dropped=dropped,
                         num_trees=len(trees) + len(oversized))
@@ -134,6 +161,33 @@ def batches(cfg: ModelConfig, lc: LoaderConfig,
     for sb in step_batches(cfg, lc, num_batches):
         if sb.inputs is not None:
             yield sb.inputs, sb.tb
+
+
+def execution_plans(cfg: ModelConfig, lc: LoaderConfig, num_batches: int,
+                    *, max_rows: Optional[int] = None):
+    """The loader's unified-engine interface: one ``ExecutionPlan`` per
+    optimizer step — the packed rows as a 1-element execution plus the
+    partition waves of any oversized trees (``auto_partition``), ready
+    for ``TreeTrainEngine.step``.  Steps whose every tree was dropped
+    still yield (an empty plan) so drop accounting reaches the caller."""
+    from repro.core.gateway import build_partition_plan
+    from repro.train.engine import ExecutionPlan, PackedExec
+
+    cap = lc.capacity or lc.seq_len
+    for sb in step_batches(cfg, lc, num_batches):
+        packed = None
+        if sb.inputs is not None:
+            packed = PackedExec(inputs=sb.inputs,
+                                tokens=int(sb.tb.valid.sum()))
+        partition = None
+        if sb.oversized:
+            partition = build_partition_plan(
+                cfg, sb.oversized, cap, seq_len=lc.seq_len,
+                loss_mode=lc.loss_mode,
+                max_rows=max_rows if max_rows is not None
+                else lc.batch_rows)
+        yield ExecutionPlan(packed=packed, partition=partition,
+                            num_trees=sb.num_trees, dropped=sb.dropped)
 
 
 def dataset_por(trees: Sequence[TrajectoryTree]) -> float:

@@ -6,6 +6,9 @@ Two flavors, matching the paper's experiments:
   - ``agentic_tree``: qualitative mimic of the real agentic rollouts in
     Fig. 6 — long shared trunks with bursts of branching from concurrent
     tool calls / think-mode context edits, sparse and unbalanced.
+  - ``grpo_tree``: the RL model-update workload — an agentic tree whose
+    branches carry group-normalized per-branch advantages
+    (``TreeNode.branch_adv``), consumed by ``loss_mode="rl"``.
 """
 from __future__ import annotations
 
@@ -124,6 +127,63 @@ def agentic_tree(
     return TrajectoryTree(root=build(0))
 
 
+def group_normalized_advantages(rewards, normalize: bool = True
+                                ) -> np.ndarray:
+    """GRPO group baseline: A = (r − mean)/std over the group's rewards
+    (``normalize=False`` passes raw rewards through).  The single source
+    of the formula — synthetic trees and serve-side rollouts both use
+    it."""
+    r = np.asarray(rewards, np.float64)
+    return (r - r.mean()) / (r.std() + 1e-6) if normalize else r
+
+
+def assign_branch_advantages(
+    tree: TrajectoryTree,
+    rewards: np.ndarray,
+    *,
+    normalize: bool = True,
+) -> np.ndarray:
+    """Attach GRPO-style per-branch advantages to a tree's leaves.
+
+    ``rewards[k]`` is the scalar reward of the k-th root-to-leaf
+    trajectory in DFS leaf order (the order of ``tree.paths()``).  With
+    ``normalize`` the group statistic is applied — A = (r − mean)/std
+    over the tree's K branches, the GRPO group baseline — otherwise the
+    raw rewards are used as advantages.  Returns the advantages."""
+    leaves = [p[-1] for p in tree.paths()]
+    r = np.asarray(rewards, np.float64)
+    assert r.shape == (len(leaves),), (r.shape, len(leaves))
+    adv = group_normalized_advantages(r, normalize)
+    for leaf, a in zip(leaves, adv):
+        leaf.branch_adv = float(a)
+    return adv.astype(np.float32)
+
+
+def grpo_tree(
+    rng: np.random.Generator,
+    *,
+    vocab_size: int = 32000,
+    num_turns: int = 6,
+    turn_len_range: tuple[int, int] = (64, 512),
+    tool_branch_prob: float = 0.4,
+    think_branch_prob: float = 0.3,
+    max_parallel_tools: int = 4,
+    reward_scale: float = 1.0,
+) -> TrajectoryTree:
+    """RL model-update workload: an agentic rollout tree whose branches
+    carry group-normalized GRPO advantages — each root-to-leaf trajectory
+    is one sample of the group, its reward drawn per leaf and normalized
+    against the tree's K siblings.  Train with ``loss_mode="rl"``."""
+    t = agentic_tree(rng, vocab_size=vocab_size, num_turns=num_turns,
+                     turn_len_range=turn_len_range,
+                     tool_branch_prob=tool_branch_prob,
+                     think_branch_prob=think_branch_prob,
+                     max_parallel_tools=max_parallel_tools)
+    rewards = rng.normal(scale=reward_scale, size=t.num_leaves())
+    assign_branch_advantages(t, rewards)
+    return t
+
+
 def trees_for_batch(
     seed: int,
     *,
@@ -133,5 +193,6 @@ def trees_for_batch(
 ) -> list[TrajectoryTree]:
     rng = np.random.default_rng(seed)
     gen = {"random": random_tree, "chain": chain_tree,
-           "por": por_controlled_tree, "agentic": agentic_tree}[kind]
+           "por": por_controlled_tree, "agentic": agentic_tree,
+           "grpo": grpo_tree}[kind]
     return [gen(rng, **kw) for _ in range(n_trees)]

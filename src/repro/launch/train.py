@@ -1,13 +1,25 @@
-"""Training launcher.
+"""Training launcher — ONE loop over the unified engine.
 
 Runs tree-training (or the sep-avg baseline) on synthetic agentic trees:
 
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-8b --smoke \\
       --steps 50 --mode tree
 
+Every step is an ``ExecutionPlan`` from ``data/loader.execution_plans``
+(packed rows + the partition waves of any oversized trees) executed by
+``train/engine.TreeTrainEngine.step`` — the same code path for all of
+``--mode tree/baseline`` × ``--auto-partition`` × ``--impl
+ref/chunked/pallas`` × ``--loss-mode sep_avg/uniform/rl``.  Gradients
+accumulate in a donated fp32 device buffer; each step performs exactly
+one host sync (the logging transfer).
+
 ``--auto-partition`` routes trees larger than one row through
 Redundancy-Free Tree Partitioning (wave-scheduled, ``--capacity`` token
 cap per partition) instead of silently dropping them — zero data loss.
+
+``--loss-mode rl`` trains the RL model-update objective: per-branch GRPO
+advantages scale λ_t (pair with ``--kind grpo`` rollout trees; with
+advantages≡1 it reproduces SFT exactly).
 
 ``--mesh host`` (default) runs on the local device(s); ``--mesh single``/
 ``multi`` builds the production mesh (requires the dry-run's fake-device
@@ -21,19 +33,16 @@ import json
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro import sharding as sh
 from repro.configs import get_config
-from repro.core.gateway import packed_partitioned_value_and_grad
-from repro.data.loader import LoaderConfig, step_batches
+from repro.data.loader import LoaderConfig, execution_plans
 from repro.launch.mesh import data_axes, make_host_mesh, \
     make_production_mesh
 from repro.models.model import init_params
 from repro.train.checkpoint import save_checkpoint
-from repro.train.optimizer import OptimizerConfig, adamw_update, \
-    init_opt_state
-from repro.train.train_step import make_grad_fn, make_train_step
+from repro.train.engine import TreeTrainEngine
+from repro.train.optimizer import OptimizerConfig, init_opt_state
 
 
 def main() -> None:
@@ -49,6 +58,15 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--impl", default="ref",
                     choices=["ref", "chunked", "pallas"])
+    ap.add_argument("--loss-mode", default="sep_avg",
+                    choices=["sep_avg", "uniform", "rl"],
+                    help="sep_avg: λ_t = g_t/K (SFT, Eq. 4); uniform: "
+                         "λ_t = 1; rl: GRPO per-branch advantages scale "
+                         "λ_t (the RL model-update phase)")
+    ap.add_argument("--kind", default=None,
+                    choices=["agentic", "grpo", "random"],
+                    help="synthetic tree generator (default: agentic; "
+                         "grpo when --loss-mode rl)")
     ap.add_argument("--auto-partition", action="store_true",
                     help="train oversized trees via wave-scheduled "
                          "partitioning instead of dropping them")
@@ -62,8 +80,10 @@ def main() -> None:
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
+    if args.kind is None:
+        args.kind = "grpo" if args.loss_mode == "rl" else "agentic"
     print(f"[train] arch={cfg.name} family={cfg.family} mode={args.mode} "
-          f"impl={args.impl}")
+          f"impl={args.impl} loss_mode={args.loss_mode} kind={args.kind}")
 
     if args.auto_partition:
         if args.mode != "tree":
@@ -94,102 +114,56 @@ def main() -> None:
 
     opt_cfg = OptimizerConfig(lr=args.lr, total_steps=args.steps,
                               warmup_steps=max(2, args.steps // 10))
+    # generator kwargs differ per kind (agentic/grpo take turn shapes,
+    # random takes segment shapes)
+    gen_kwargs = (dict(seg_len_range=(8, 48), max_depth=4)
+                  if args.kind == "random"
+                  else dict(turn_len_range=(8, 48), num_turns=4))
     lc = LoaderConfig(seq_len=args.seq_len, batch_rows=args.rows,
                       trees_per_batch=args.trees, mode=args.mode,
-                      kind="agentic", seed=args.seed,
+                      kind=args.kind, seed=args.seed,
+                      loss_mode=args.loss_mode,
                       auto_partition=args.auto_partition,
                       capacity=args.capacity,
-                      gen_kwargs=dict(turn_len_range=(8, 48),
-                                      num_turns=4))
+                      gen_kwargs=gen_kwargs)
 
     with sh.use_mesh(mesh, data_axes=daxes):
         params = init_params(cfg, jax.random.key(args.seed))
         opt_state = init_opt_state(params)
+        engine = TreeTrainEngine(cfg, opt_cfg, impl=args.impl)
 
-        tokens_done = 0
-        part_trees = part_tokens = dropped_total = 0
+        tokens_done = part_trees = part_tokens = dropped_total = 0
         t0 = time.time()
         history = []
-        if args.auto_partition:
-            # grads of the packed batch and of the partitioned oversized
-            # trees accumulate into ONE optimizer step (paper §3.4: the
-            # partition stays inside the gradient-accumulation step)
-            gfn = make_grad_fn(cfg, impl=args.impl)
-            update_fn = jax.jit(
-                lambda p, g, s: adamw_update(opt_cfg, p, g, s),
-                donate_argnums=(0, 1, 2))
-            cap = lc.capacity or lc.seq_len
-            for i, sb in enumerate(step_batches(cfg, lc, args.steps)):
-                ts = time.time()
-                n_trees = max(sb.num_trees, 1)
-                loss, grads, m = 0.0, None, {}
-                nll = float("nan")
-                if sb.inputs is not None:
-                    sb.inputs["num_trees"] = n_trees
-                    li, grads, m = gfn(params, sb.inputs)
-                    loss += float(li)
-                    nll = float(m["token_nll_mean"])
-                    tokens_done += int(sb.tb.valid.sum())
-                dropped_total += sb.dropped
-                if sb.oversized:
-                    tp = time.time()
-                    l_p, g_p, pinfo = packed_partitioned_value_and_grad(
-                        cfg, params, sb.oversized, cap,
-                        seq_len=lc.seq_len, impl=args.impl,
-                        loss_mode=lc.loss_mode, max_rows=lc.batch_rows)
-                    m["partition_sec"] = time.time() - tp
-                    loss += l_p / n_trees
-                    g_p = jax.tree.map(lambda a: a / n_trees, g_p)
-                    # accumulate in fp32: the wave driver's fp32 grads
-                    # must not round through the packed grads' bf16
-                    grads = g_p if grads is None else jax.tree.map(
-                        lambda a, b: a.astype(jnp.float32) + b, grads, g_p)
-                    part_trees += len(sb.oversized)
-                    part_tokens += pinfo["unique_tokens"]
-                    tokens_done += pinfo["unique_tokens"]
-                    if sb.inputs is None:
-                        # batch is entirely oversized trees: report the
-                        # partitioned-path per-token nll (token CE only,
-                        # comparable to token_nll_mean), not nan
-                        nll = pinfo["nll_sum"] / max(pinfo["weight_sum"],
-                                                     1e-9)
-                if grads is None:      # nothing trainable this step
-                    continue
-                params, opt_state, om = update_fn(params, grads, opt_state)
-                dt = time.time() - ts
-                history.append({"step": i, "loss": loss, "nll": nll,
-                                "sec": dt,
-                                "oversized": len(sb.oversized),
-                                "dropped": sb.dropped})
-                if i % args.log_every == 0:
-                    print(f"step {i:4d} loss {loss:10.4f} "
-                          f"nll/tok {nll:7.4f} "
-                          f"gnorm {float(om['grad_norm']):8.3f} "
-                          f"parts {len(sb.oversized):2d} "
-                          f"{dt * 1e3:7.1f}ms", flush=True)
-        else:
-            step_fn = make_train_step(cfg, opt_cfg, impl=args.impl)
-            for i, sb in enumerate(step_batches(cfg, lc, args.steps)):
-                dropped_total += sb.dropped
-                if sb.inputs is None:   # every tree dropped this step
-                    continue
-                ts = time.time()
-                params, opt_state, m = step_fn(params, opt_state, sb.inputs)
-                loss = float(m["total"])
-                dt = time.time() - ts
-                tokens_done += int(sb.tb.valid.sum())
-                history.append({"step": i, "loss": loss,
-                                "nll": float(m["token_nll_mean"]),
-                                "sec": dt, "oversized": 0,
-                                "dropped": sb.dropped})
-                if i % args.log_every == 0:
-                    print(f"step {i:4d} loss {loss:10.4f} "
-                          f"nll/tok {float(m['token_nll_mean']):7.4f} "
-                          f"gnorm {float(m['grad_norm']):8.3f} "
-                          f"{dt * 1e3:7.1f}ms", flush=True)
+        # THE training loop: every step — packed rows, partition waves,
+        # SFT or RL — is one engine.step over its ExecutionPlan
+        for i, plan in enumerate(
+                execution_plans(cfg, lc, args.steps, max_rows=args.rows)):
+            dropped_total += plan.dropped
+            if plan.is_empty:       # nothing trainable this step
+                continue
+            ts = time.time()
+            params, opt_state, m = engine.step(params, opt_state, plan)
+            dt = time.time() - ts
+            tokens_done += plan.unique_tokens
+            part_trees += plan.num_oversized
+            if plan.partition is not None and plan.partition.waves:
+                part_tokens += plan.partition.info["unique_tokens"]
+            history.append({"step": i, "loss": m["loss"], "nll": m["nll"],
+                            "sec": dt,
+                            "oversized": plan.num_oversized,
+                            "dropped": plan.dropped})
+            if i % args.log_every == 0:
+                print(f"step {i:4d} loss {m['loss']:10.4f} "
+                      f"nll/tok {m['nll']:7.4f} "
+                      f"gnorm {m['grad_norm']:8.3f} "
+                      f"parts {plan.num_oversized:2d} "
+                      f"{dt * 1e3:7.1f}ms", flush=True)
         wall = time.time() - t0
         print(f"[train] {len(history)} steps, {tokens_done} unique tokens, "
-              f"{dropped_total} dropped trees, {wall:.1f}s wall")
+              f"{dropped_total} dropped trees, {wall:.1f}s wall "
+              f"({engine.host_syncs} host syncs / {engine.steps_done} "
+              f"steps)")
         if args.auto_partition:
             print(f"[train] partitioned: {part_trees} oversized trees, "
                   f"{part_tokens} tokens, {dropped_total} dropped")

@@ -30,8 +30,15 @@ def max_conv_taps(cfg: ModelConfig) -> int:
 
 
 def prepare_batch(cfg: ModelConfig, tb: TreeBatch,
-                  extra_embeds: Optional[np.ndarray] = None) -> dict:
-    """TreeBatch (host numpy) → jnp input dict for forward/loss."""
+                  extra_embeds: Optional[np.ndarray] = None, *,
+                  num_trees: Optional[int] = None) -> dict:
+    """TreeBatch (host numpy) → jnp input dict for forward/loss.
+
+    ``num_trees`` overrides the loss normalizer (mean over trees): when a
+    step trains more trees than the packed batch holds — oversized trees
+    riding the partition waves — the packed loss must divide by the
+    step's FULL tree count so both shares sum to one mean-over-trees
+    objective."""
     d: dict[str, Any] = {
         "tokens": jnp.asarray(tb.tokens),
         "pos_ids": jnp.asarray(tb.pos_ids),
@@ -39,7 +46,7 @@ def prepare_batch(cfg: ModelConfig, tb: TreeBatch,
         "weight": jnp.asarray(tb.weight),
         "prev_idx": jnp.asarray(tb.prev_idx),
         "valid": jnp.asarray(tb.valid),
-        "num_trees": tb.num_trees,
+        "num_trees": tb.num_trees if num_trees is None else num_trees,
     }
     if needs_chunks(cfg):
         assert tb.chunk_parent is not None, \

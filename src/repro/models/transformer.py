@@ -536,6 +536,10 @@ def loss_and_metrics(cfg: ModelConfig, params: dict, batch: dict,
     total = loss + aux
     metrics = {"loss": loss, "aux_loss": aux,
                "weight_sum": jnp.sum(w),
+               # un-normalized token CE (no MoE aux, no tree denominator):
+               # the engine accumulates this on-device across microbatch
+               # executions and divides by weight_sum once at logging time
+               "nll_sum": jnp.sum(w * nll),
                "token_nll_mean": jnp.sum(w * nll) / jnp.maximum(
                    jnp.sum(w), 1e-9)}
     return total, metrics

@@ -4,6 +4,10 @@
 new token against a KV/SSM cache.  Caches are layer-stacked pytrees so the
 decode layer loop is a lax.scan (same compile-size discipline as training).
 
+``rollouts_to_tree`` closes the RL loop: K sampled rollouts + rewards →
+one shared-prefix trajectory tree with GRPO branch advantages, ready for
+the training engine's ``loss_mode="rl"``.
+
 Cache kinds:
   attention   : ring-buffer K/V of ``buf_len`` slots (full history for
                 decode_32k; sliding window for long_500k dense variants)
@@ -18,6 +22,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models.attention import decode_attention, project_cross_kv
@@ -143,6 +148,62 @@ def _decode_layer(cfg: ModelConfig, p: dict, kind: str, x, cache_l, pos,
         m = mlp(p["mlp"], rmsnorm(p["ln2"], x, eps), cfg.mlp_activation)
         return x + m, cache_l
     raise ValueError(kind)
+
+
+def rollouts_to_tree(sequences, rewards, *, prompt_len: int = 0,
+                     normalize: bool = True):
+    """Sampled rollouts → a trajectory tree for the RL update phase.
+
+    ``sequences[k]`` is the full token sequence of rollout k (prompt +
+    completion, e.g. collected by looping ``decode_step``); ``rewards[k]``
+    its scalar reward.  Shared prefixes are merged into one trie — the
+    tree the training engine natively ingests — and each leaf gets the
+    GRPO group-normalized advantage (A = (r − mean)/std over the K
+    rollouts; ``normalize=False`` keeps raw rewards).  Tokens before
+    ``prompt_len`` are ``trained=False`` (prompt/context, no loss).
+
+    A rollout that is a strict prefix of another (or duplicated rollouts)
+    contributes an empty leaf node so its advantage still lands on its
+    own branch.  Train the result with ``loss_mode="rl"``.
+    """
+    from repro.core.tree import TrajectoryTree, TreeNode
+    from repro.data.synthetic import group_normalized_advantages
+
+    seqs = [np.asarray(s, np.int32).reshape(-1) for s in sequences]
+    assert seqs and len(seqs) == len(rewards)
+    adv = group_normalized_advantages(rewards, normalize)
+
+    def node(lo: int, hi: int, k: int) -> "TreeNode":
+        toks = seqs[k][lo:hi]
+        trained = np.arange(lo, hi) >= prompt_len
+        return TreeNode(tokens=toks, trained=trained)
+
+    def build(idx: list, off: int) -> "TreeNode":
+        # maximal segment shared by every rollout in ``idx`` from ``off``
+        end = min(len(seqs[i]) for i in idx)
+        cp = off
+        while cp < end and all(seqs[i][cp] == seqs[idx[0]][cp]
+                               for i in idx[1:]):
+            cp += 1
+        n = node(off, cp, idx[0])
+        ended = [i for i in idx if len(seqs[i]) == cp]
+        by_tok: dict[int, list] = {}
+        for i in idx:
+            if len(seqs[i]) > cp:
+                by_tok.setdefault(int(seqs[i][cp]), []).append(i)
+        if not by_tok and len(ended) == 1:
+            n.branch_adv = float(adv[ended[0]])
+            return n
+        # rollouts ending exactly here (prefixes / duplicates) become
+        # empty leaves so each keeps its own branch advantage
+        for i in ended:
+            n.children.append(TreeNode(tokens=np.zeros(0, np.int32),
+                                       branch_adv=float(adv[i])))
+        for _, sub in sorted(by_tok.items()):
+            n.children.append(build(sub, cp))
+        return n
+
+    return TrajectoryTree(root=build(list(range(len(seqs))), 0))
 
 
 def decode_step(cfg: ModelConfig, params: dict, cache: dict,

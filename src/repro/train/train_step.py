@@ -1,14 +1,20 @@
-"""Train step: tree-training and baseline modes behind one interface.
+"""Train step primitives: tree-training and baseline modes behind one
+interface.
 
 ``make_train_step(cfg, opt_cfg, impl)`` returns a jit-able
 ``(params, opt_state, batch) → (params, opt_state, metrics)``.  Whether a
 step is "tree" or "baseline" is decided purely by how the batch was packed
 (core/packing.pack_trees vs pack_linear_paths) — the model code is shared,
 which is what makes the speedup comparison apples-to-apples.
+
+The production trainer composes these pieces differently: the unified
+plan→execute engine (train/engine.py) accumulates per-microbatch grads
+on-device and applies ``jitted_update`` — the AdamW executable cached per
+OptimizerConfig below.
 """
 from __future__ import annotations
 
-from functools import partial
+from functools import lru_cache, partial
 
 import jax
 
@@ -41,5 +47,18 @@ def make_grad_fn(cfg: ModelConfig, impl: str = "ref"):
     return jax.jit(gfn)
 
 
+@lru_cache(maxsize=16)
+def jitted_update(opt_cfg: OptimizerConfig, donate: bool = False):
+    """The jitted AdamW update, cached per (OptimizerConfig, donate) —
+    tracing once instead of on every call.  ``donate=True`` donates
+    (params, grads, opt_state) for in-place buffer reuse; this is the
+    cache the unified engine (train/engine.py) uses too.
+
+    Signature of the returned fn: ``(params, grads, opt_state) →
+    (new_params, new_opt_state, metrics)``."""
+    fn = partial(adamw_update, opt_cfg)
+    return jax.jit(fn, donate_argnums=(0, 1, 2) if donate else ())
+
+
 def apply_grads(opt_cfg: OptimizerConfig, params, opt_state, grads):
-    return jax.jit(partial(adamw_update, opt_cfg))(params, grads, opt_state)
+    return jitted_update(opt_cfg)(params, grads, opt_state)
