@@ -23,6 +23,10 @@ the same rows as a JSON artifact for CI:
                      (packed rows + oversized trees) through the unified
                      plan→execute TreeTrainEngine vs the pre-refactor
                      two-branch loop; asserts ≤ 1 host sync per step
+  plan_efficiency    schedule level — plan-ahead scheduler: padded-vs-
+                     unique tokens of global lookahead packing vs greedy
+                     per-step first-fit, plus plan-build ms overlapped vs
+                     exposed behind engine steps (async pipeline)
 
 Flags:
   --smoke      tiny qwen1.5-0.5B-scale config, CPU-interpret friendly,
@@ -473,6 +477,79 @@ def bench_engine_step(smoke: bool = False, impl: str = "ref") -> None:
 
 
 # ---------------------------------------------------------------------------
+# schedule level — plan-ahead scheduler efficiency + async overlap
+# ---------------------------------------------------------------------------
+
+def bench_plan_efficiency(smoke: bool = False, impl: str = "ref") -> None:
+    """The plan-ahead scheduler (train/planner): padded-vs-unique token
+    efficiency of global lookahead bin packing (cost-model-chosen
+    candidates) vs greedy per-step first-fit on the same tree stream, and
+    plan-build time overlapped behind ``TreeTrainEngine.step`` by the
+    async double-buffered pipeline (``--plan-workers 1``)."""
+    from repro.data.loader import LoaderConfig
+    from repro.train.engine import TreeTrainEngine
+    from repro.train.optimizer import OptimizerConfig, init_opt_state
+    from repro.train.planner import (PlannerConfig, plan_pipeline,
+                                     plan_stream)
+
+    if smoke:
+        cfg = bench_model(n_layers=2, d_model=64)
+        S, rows, trees, steps = 256, 2, 3, 8
+        gen = dict(turn_len_range=(6, 30), num_turns=3)
+    else:
+        cfg = bench_model(n_layers=2)
+        S, rows, trees, steps = 512, 4, 6, 16
+        gen = dict(turn_len_range=(16, 64), num_turns=4)
+    lc = LoaderConfig(seq_len=S, batch_rows=rows, trees_per_batch=trees,
+                      mode="tree", kind="agentic", seed=13,
+                      gen_kwargs=gen)
+
+    def packed_stats(pc):
+        pad = uniq = nsteps = 0
+        for ps in plan_stream(cfg, lc, steps, pc):
+            sb = ps.step_batch()
+            if sb.tb is None:
+                continue
+            nsteps += 1
+            pad += sb.tb.tokens.size - int(sb.tb.valid.sum())
+            uniq += int(sb.tb.valid.sum())
+        return pad, uniq, nsteps
+
+    pad_g, uniq_g, steps_g = packed_stats(
+        PlannerConfig(lookahead=1, heuristics=("ffd",)))
+    pad_p, uniq_p, steps_p = packed_stats(PlannerConfig(lookahead=4))
+    r_g = pad_g / max(uniq_g, 1)
+    r_p = pad_p / max(uniq_p, 1)
+
+    # ---- async overlap: drive the engine from the pipeline ---------------
+    opt_cfg = OptimizerConfig(lr=1e-3, warmup_steps=2, total_steps=steps)
+    params = init_params(cfg, jax.random.key(0))
+    engine = TreeTrainEngine(cfg, opt_cfg, impl=impl, donate=False)
+    opt = init_opt_state(params)
+    p = params
+    for plan in plan_pipeline(cfg, lc, steps,
+                              PlannerConfig(lookahead=4)):   # warm jit
+        p, opt, _ = engine.step(p, opt, plan)
+    pipe = plan_pipeline(cfg, lc, steps,
+                         PlannerConfig(lookahead=4, plan_workers=1))
+    opt = init_opt_state(params)
+    p = params
+    n = 0
+    t0 = time.perf_counter()
+    for plan in pipe:
+        p, opt, _ = engine.step(p, opt, plan)
+        n += 1
+    wall = time.perf_counter() - t0
+    emit("plan_efficiency", pipe.build_s * 1e6 / max(pipe.built, 1),
+         f"pad_per_unique_greedy={r_g:.3f} pad_per_unique_planner={r_p:.3f} "
+         f"steps={steps_g}->{steps_p} sched_ms={pipe.schedule_s * 1e3:.1f} "
+         f"build_ms={pipe.build_s * 1e3:.1f} "
+         f"exposed_ms={pipe.exposed_s * 1e3:.1f} "
+         f"exposed_frac_of_wall={pipe.exposed_s / max(wall, 1e-9):.3f}")
+    assert r_p <= r_g, (r_p, r_g)   # planner never pads more than greedy
+
+
+# ---------------------------------------------------------------------------
 # --smoke — tiny model fwd+bwd through the packed tree loss (CI gate)
 # ---------------------------------------------------------------------------
 
@@ -520,6 +597,7 @@ def main(argv=None) -> None:
         bench_packed_partition(smoke=True)
         bench_gateway_impl(smoke=True)
         bench_engine_step(smoke=True, impl=args.impl)
+        bench_plan_efficiency(smoke=True, impl=args.impl)
     else:
         bench_por_sweep(args.impl)
         bench_partition_tokens()
@@ -531,6 +609,7 @@ def main(argv=None) -> None:
         bench_packed_partition()
         bench_gateway_impl()
         bench_engine_step(impl=args.impl)
+        bench_plan_efficiency(impl=args.impl)
     if args.out:
         artifact = {
             "smoke": args.smoke,

@@ -42,6 +42,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.packing import pack_partition_waves
 from repro.core.partition import TreePartition, partition_tree
+from repro.core.plan_cost import pow2
 from repro.core.tree import TrajectoryTree
 from repro.models.layers import prev_powers
 from repro.models.model import max_conv_taps, needs_chunks
@@ -383,11 +384,9 @@ def partitioned_value_and_grad(
 # ---------------------------------------------------------------------------
 
 
-def _pow2(n: int, lo: int = 1) -> int:
-    b = lo
-    while b < n:
-        b *= 2
-    return b
+# THE shape-bucket rule, shared with the schedule cost model so planner
+# signature estimates match the buckets the engine actually compiles
+_pow2 = pow2
 
 
 def _pad_rows(a: np.ndarray, Bb: int, fill) -> np.ndarray:
@@ -587,6 +586,8 @@ def build_partition_plan(
     seq_len: Optional[int] = None,
     loss_mode: str = "sep_avg",
     max_rows: Optional[int] = None,
+    row_multiple: int = 1,
+    forest: Optional[list[list[TreePartition]]] = None,
 ) -> PartitionPlan:
     """Plan (host-side only) the wave-scheduled partitioned execution of
     MANY oversized trees: partition each tree, pack every partition into
@@ -595,7 +596,13 @@ def build_partition_plan(
 
     No device work happens here — the plan is pure numpy + static
     metadata.  ``train/engine.py`` executes it (one jitted forward and one
-    jitted remat-backward per wave, gradients accumulated on-device)."""
+    jitted remat-backward per wave, gradients accumulated on-device).
+
+    ``row_multiple`` rounds every wave's bucketed row count up to a
+    multiple (the mesh's data-axis size) so wave batches shard evenly
+    across replicas; ``forest`` passes precomputed partitions (the
+    scheduler partitions each tree exactly once and reuses the result
+    here — must match ``partition_tree`` on the same args)."""
     chunk_size = cfg.ssm.chunk_size if needs_chunks(cfg) else None
     seq_len = capacity if seq_len is None else seq_len
     assert capacity <= seq_len, (capacity, seq_len)
@@ -604,8 +611,10 @@ def build_partition_plan(
     if not trees:
         return PartitionPlan(waves=[], num_trees=0, info=info)
 
-    forest = [partition_tree(t, capacity, chunk_size=chunk_size,
-                             loss_mode=loss_mode) for t in trees]
+    if forest is None:
+        forest = [partition_tree(t, capacity, chunk_size=chunk_size,
+                                 loss_mode=loss_mode) for t in trees]
+    assert len(forest) == len(trees)
     waves = pack_partition_waves(forest, seq_len, chunk_size=chunk_size,
                                  max_rows=max_rows)
     cut_of_child: dict[tuple[int, int], tuple[int, int]] = {}
@@ -622,8 +631,15 @@ def build_partition_plan(
                                   for ps in forest for p in ps))
 
     plans: list[WavePlan] = []
+    cells = 0
     for w, wv in enumerate(waves):
-        B, Bb = wv.num_rows, _pow2(wv.num_rows)
+        B = wv.num_rows
+        # bucket in per-replica units: identical to pow2 for power-of-two
+        # replica counts, but never inflates past ~the max_rows budget the
+        # way rounding pow2(B) up to an odd multiple would (e.g. B=6,
+        # R=6 → 6, not round_to_multiple(8, 6)=12)
+        Bb = row_multiple * _pow2(-(-B // row_multiple))
+        cells += Bb * seq_len
         a = wv.arrays
         prev_np = _pad_rows(a["prev_idx"], Bb, -1)
         batch = {
@@ -696,6 +712,7 @@ def build_partition_plan(
                               A_real=A_real, anc_A_max=A_max,
                               anc_pos_rows=anc_pos_rows))
 
+    info["cells"] = cells     # materialized row cells (bucketed rows × S)
     return PartitionPlan(waves=plans, num_trees=len(trees), info=info)
 
 

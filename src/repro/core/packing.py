@@ -72,33 +72,35 @@ def _empty_row(S: int) -> dict[str, np.ndarray]:
     )
 
 
-def pack_trees(
-    trees: Sequence[SerializedTree],
+def plan_tree_rows(
+    sizes: Sequence[int],
     seq_len: int,
     *,
     batch_size: Optional[int] = None,
-    chunk_size: Optional[int] = None,
-) -> TreeBatch:
-    """First-fit-decreasing pack of whole serialized trees into rows.
+    heuristic: str = "ffd",
+) -> list[list[int]]:
+    """Row *assignment* only — no arrays touched.  Returns rows as lists
+    of item indices (items sorted and placed largest-first).
 
-    Every tree must fit in one row (use Redundancy-Free Tree Partitioning
-    for larger trees — core/partition.py).  If ``chunk_size`` is given the
-    serializations must be chunk-aligned and rows carry a chunk_parent map.
-    """
-    order = sorted(range(len(trees)), key=lambda i: -trees[i].n)
+    heuristic 'ffd': first-fit decreasing (the historical packer);
+    'bfd': best-fit decreasing (tightest row that still fits — fewer
+    stranded holes on mixed-size streams).  The planner scores both with
+    the cost model (core/plan_cost) and materializes the winner."""
+    order = sorted(range(len(sizes)), key=lambda i: (-sizes[i], i))
     rows: list[list[int]] = []
     row_used: list[int] = []
     for i in order:
-        n = trees[i].n
+        n = sizes[i]
         if n > seq_len:
             raise DoesNotFitError(
                 f"tree of {n} tokens does not fit row of {seq_len}; "
                 "partition it first (core/partition.py)")
-        for r, used in enumerate(row_used):
-            if used + n <= seq_len:
-                rows[r].append(i)
-                row_used[r] += n
-                break
+        fit = [r for r, used in enumerate(row_used) if used + n <= seq_len]
+        if fit:
+            r = fit[0] if heuristic == "ffd" else \
+                min(fit, key=lambda r_: seq_len - row_used[r_] - n)
+            rows[r].append(i)
+            row_used[r] += n
         else:
             rows.append([i])
             row_used.append(n)
@@ -109,7 +111,25 @@ def pack_trees(
                 f"{len(rows)} rows > batch_size {batch_size}")
         while len(rows) < batch_size:
             rows.append([])
+    return rows
 
+
+def materialize_tree_rows(
+    trees: Sequence[SerializedTree],
+    rows: Sequence[Sequence[int]],
+    seq_len: int,
+    *,
+    chunk_size: Optional[int] = None,
+) -> TreeBatch:
+    """Materialize a planned row assignment (``rows[r]`` = tree indices
+    sharing row r, in placement order) into a fixed-shape TreeBatch.  If
+    ``chunk_size`` is given the serializations must be chunk-aligned and
+    rows carry a chunk_parent map."""
+    for r in rows:
+        if sum(trees[i].n for i in r) > seq_len:
+            raise DoesNotFitError(
+                f"planned row of {sum(trees[i].n for i in r)} tokens "
+                f"exceeds seq_len {seq_len}")
     B, S = len(rows), seq_len
     cols = {k: [] for k in
             ("tokens", "pos_ids", "kv_last", "weight", "prev_idx", "valid")}
@@ -150,9 +170,28 @@ def pack_trees(
         prev_idx=np.stack(cols["prev_idx"]),
         valid=np.stack(cols["valid"]),
         chunk_parent=np.stack(chunk_rows) if chunk_rows else None,
-        num_trees=len(trees),
+        num_trees=sum(len(r) for r in rows),
         row_trees=np.asarray([len(r) for r in rows], np.int32),
     )
+
+
+def pack_trees(
+    trees: Sequence[SerializedTree],
+    seq_len: int,
+    *,
+    batch_size: Optional[int] = None,
+    chunk_size: Optional[int] = None,
+) -> TreeBatch:
+    """First-fit-decreasing pack of whole serialized trees into rows
+    (plan + materialize in one call — the planner calls the two halves
+    separately so it can score candidate assignments first).
+
+    Every tree must fit in one row (use Redundancy-Free Tree Partitioning
+    for larger trees — core/partition.py)."""
+    rows = plan_tree_rows([t.n for t in trees], seq_len,
+                          batch_size=batch_size)
+    return materialize_tree_rows(trees, rows, seq_len,
+                                 chunk_size=chunk_size)
 
 
 def pack_linear_paths(

@@ -235,6 +235,24 @@ def partition_tree(
     return parts
 
 
+def partition_schedule_load(parts: list[TreePartition]) -> dict:
+    """Schedule-level load summary of ONE partitioned tree, for the
+    planner's cross-step balancing (train/planner): ``tokens`` is the row
+    cells its waves must materialize (serialized, chunk-padded), ``depth``
+    the number of waves it forces — the step's partitioned critical
+    path — and ``width`` the widest single depth level (row pressure)."""
+    depth: dict[int, int] = {}
+    width: dict[int, int] = {}
+    for p in parts:
+        d = 0 if p.parent_pid < 0 else depth[p.parent_pid] + 1
+        depth[p.pid] = d
+        width[d] = width.get(d, 0) + 1
+    return dict(tokens=sum(p.ser.n for p in parts),
+                num_partitions=len(parts),
+                depth=1 + max(depth.values()) if depth else 0,
+                width=max(width.values()) if width else 0)
+
+
 def partition_token_counts(parts: list[TreePartition]) -> dict:
     """Accounting for the Fig.-5 benchmark."""
     unique = sum(int(p.ser.valid.sum()) for p in parts)

@@ -1,0 +1,191 @@
+"""Schedule-level cost model for Tree Packing plans.
+
+The paper's Tree Packing fixes *what* shares a row (whole serialized
+trees, mutually invisible under ``kv_last``); the remaining degrees of
+freedom live at the schedule level — which trees share a step, how many
+rows a step materializes, and which jit signatures the stream exercises.
+This module scores candidate packings so the planner
+(``train/planner.py``) can choose among placement heuristics and
+lookahead windows instead of committing to per-step first-fit.
+
+Three cost components, all in **token-cell units** (one token slot of one
+row) so they add meaningfully:
+
+  padded tokens      every materialized row cell that holds no valid
+                     token still costs HBM traffic and (partially) MXU
+                     work — the paper's padded-vs-unique overhead;
+  compile-cache miss a packed shape signature the jit cache has not seen
+                     triggers a trace+lower+compile stall, amortized here
+                     as ``compile_miss`` token-cells per new signature
+                     (wave-shape signatures are not modeled yet — see
+                     ROADMAP open items);
+  live blocks        the tree-attention kernels skip KV blocks wholly
+                     invisible to a query block (App. A.1), so attention
+                     compute scales with the number of *live* blocks, not
+                     rows×tri(S/b).  Packing many small trees into a row
+                     keeps blocks near the diagonal and raises the skip
+                     fraction; one long tree lights up its whole
+                     lower-triangle.
+
+Pure numpy/host code — no jax imports, safe to call from the planner's
+background build threads.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Hashable, Iterable, Sequence
+
+
+def pow2(n: int, lo: int = 1) -> int:
+    """Smallest power of two ≥ n (and ≥ lo) — THE shape-bucket rule, shared
+    with the wave planner (core/gateway) so cost-model signature estimates
+    match the buckets the engine actually compiles."""
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+def round_to_multiple(n: int, m: int) -> int:
+    """Smallest multiple of m ≥ n (replica-balanced row counts)."""
+    if m <= 1:
+        return n
+    return ((n + m - 1) // m) * m
+
+
+def _tri(n: int) -> int:
+    return n * (n + 1) // 2
+
+
+def row_live_blocks(sizes: Sequence[int], block: int) -> int:
+    """Estimated live (non-skipped) attention blocks for ONE row packed
+    with trees of the given serialized lengths.
+
+    Each tree of n tokens spans ``c = ceil(n/block)`` query blocks and its
+    visible KV is confined to its own span, giving ~tri(c) live blocks;
+    straddling a block boundary can light up at most one extra diagonal
+    per tree, which we fold in when the tree is not block-aligned."""
+    live = 0
+    for n in sizes:
+        if n <= 0:
+            continue
+        c = -(-n // block)
+        live += _tri(c)
+        if n % block:
+            live += c - 1       # boundary straddle with the next resident
+    return live
+
+
+def _packing_live_blocks(row_sizes: Sequence[Sequence[int]], seq_len: int,
+                         block: int) -> tuple[int, int]:
+    """(live, causal) block counts for a candidate packing — the single
+    definition both ``est_block_skip`` and ``score_packing`` share."""
+    nq = max(seq_len // block, 1)
+    causal = _tri(nq) * len(row_sizes)
+    live = sum(min(row_live_blocks(s, block), _tri(nq)) for s in row_sizes)
+    return live, causal
+
+
+def est_block_skip(row_sizes: Sequence[Sequence[int]], seq_len: int,
+                   block: int) -> float:
+    """Estimated fraction of causal-schedule blocks the kernel skips for a
+    candidate packing (rows → serialized tree lengths).  Empty rows are
+    fully skipped (kv_last = −1 everywhere)."""
+    live, causal = _packing_live_blocks(row_sizes, seq_len, block)
+    return 1.0 - live / causal if causal else 0.0
+
+
+class CompileCacheSim:
+    """Host-side mirror of the jit signature cache: the planner charges a
+    candidate only for signatures the stream has not already compiled."""
+
+    def __init__(self) -> None:
+        self.seen: set[Hashable] = set()
+
+    def misses(self, sigs: Iterable[Hashable]) -> int:
+        return len({s for s in sigs if s not in self.seen})
+
+    def commit(self, sigs: Iterable[Hashable]) -> None:
+        self.seen.update(sigs)
+
+
+def packed_signature(n_rows: int, seq_len: int) -> Hashable:
+    return ("packed", n_rows, seq_len)
+
+
+@dataclass(frozen=True)
+class CostWeights:
+    """All weights are token-cells per unit of the component."""
+    pad: float = 1.0             # per padded (invalid) token cell
+    compile_miss: float = 4096.0  # per new jit signature
+    live_block: float = 0.25      # per live block, scaled by block²
+
+
+@dataclass
+class PackingCost:
+    """Score breakdown for one candidate packing (lower total = better)."""
+    padded_tokens: int
+    used_tokens: int
+    est_skip: float              # estimated block-skip fraction
+    live_blocks: int
+    new_signatures: int
+    total: float
+
+    @property
+    def pad_per_unique(self) -> float:
+        return self.padded_tokens / max(self.used_tokens, 1)
+
+
+DEFAULT_WEIGHTS = CostWeights()
+
+
+def score_packing(
+    row_sizes: Sequence[Sequence[int]],
+    seq_len: int,
+    *,
+    block: int = 64,
+    signatures: Iterable[Hashable] = (),
+    cache: CompileCacheSim | None = None,
+    weights: CostWeights = DEFAULT_WEIGHTS,
+) -> PackingCost:
+    """Score a candidate packing: ``row_sizes[r]`` lists the serialized
+    token counts sharing materialized row r (include empty rows — their
+    padding is real).  ``signatures`` are the jit signatures the candidate
+    would execute; with a ``cache`` only unseen ones are charged."""
+    used = sum(sum(s) for s in row_sizes)
+    padded = len(row_sizes) * seq_len - used
+    live, causal = _packing_live_blocks(row_sizes, seq_len, block)
+    skip = 1.0 - live / causal if causal else 0.0
+    sigs = list(signatures)
+    miss = cache.misses(sigs) if cache is not None else len(set(sigs))
+    total = (weights.pad * padded
+             + weights.compile_miss * miss
+             + weights.live_block * live * block * block)
+    return PackingCost(padded_tokens=padded, used_tokens=used,
+                       est_skip=skip, live_blocks=live,
+                       new_signatures=miss, total=total)
+
+
+def balanced_row_order(row_loads: Sequence[int], num_replicas: int
+                       ) -> list[int]:
+    """Permutation of rows such that splitting the reordered rows into
+    ``num_replicas`` contiguous shards (how the data axis slices the
+    leading dim) balances both the non-empty-row count (≤1 apart) and the
+    token load: rows are dealt snake-wise, heaviest first.
+
+    ``len(row_loads)`` must be a multiple of ``num_replicas`` (the planner
+    rounds row counts up first)."""
+    B = len(row_loads)
+    if num_replicas <= 1 or B % num_replicas:
+        return list(range(B))
+    order = sorted(range(B), key=lambda r: (-row_loads[r], r))
+    shards: list[list[int]] = [[] for _ in range(num_replicas)]
+    for i, r in enumerate(order):
+        rnd, j = divmod(i, num_replicas)
+        if rnd % 2:
+            j = num_replicas - 1 - j
+        shards[j].append(r)
+    out: list[int] = []
+    for s in shards:
+        out.extend(s)
+    return out

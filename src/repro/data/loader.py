@@ -1,36 +1,27 @@
-"""Batching pipeline: trees → packed TreeBatch stream.
+"""Tree ingestion: synthetic generator batches → the planner's stream.
 
 Paper §3.4: each global batch is a self-contained set of whole trees —
 shuffling happens *between* trees, never inside one, so tree partitioning
 stays within a gradient-accumulation step and the gradient is unbiased.
 
-Two modes behind one iterator:
-  tree mode     : DFS-serialize + pack_trees      (Tree Training)
-  baseline mode : linearize paths + pack           (sep-avg baseline)
-
-With ``auto_partition`` on (tree mode), trees whose serialization exceeds
-one row are no longer dropped: they ride along each step as ``oversized``
-and train through the wave-scheduled partition plan
-(core/gateway.build_partition_plan) — zero data loss, every token
-computed exactly once under the ``capacity`` memory cap.
-
-``execution_plans`` is the unified-engine interface: it folds the packed
-rows and the partition waves of each step into ONE ``ExecutionPlan`` for
-``train/engine.TreeTrainEngine.step``.
+This module owns the *data* side only: generator configuration
+(``LoaderConfig``), the raw tree stream (``tree_stream``), and the
+per-step data container (``StepBatch``).  Everything schedule-shaped —
+which trees share a step, row assignment, eviction/drop accounting,
+oversized routing, replica balancing — lives in the plan-ahead scheduler
+(``train/planner.py``); ``step_batches`` and ``execution_plans`` are thin
+wrappers over its stream, so the fit/pack/drop accounting exists exactly
+once.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 from typing import Iterator, Optional, Sequence
 
-import numpy as np
-
 from repro.configs.base import ModelConfig
-from repro.core.packing import (DoesNotFitError, TreeBatch,
-                                pack_linear_paths, pack_trees)
-from repro.core.tree import TrajectoryTree, serialize_tree
+from repro.core.packing import TreeBatch
+from repro.core.tree import TrajectoryTree
 from repro.data.synthetic import trees_for_batch
-from repro.models.model import needs_chunks, prepare_batch
 
 
 @dataclass
@@ -58,101 +49,27 @@ class StepBatch:
     num_trees: int = 0                  # packed + oversized (normalizer)
 
 
-@dataclass
-class _FitTree:
-    """One row-sized tree with its serialization artifacts, computed ONCE
-    (the size filter and the packer used to serialize the same tree twice,
-    and the does-not-fit retry loop re-serialized on every attempt)."""
-    tree: TrajectoryTree
-    ser: object                       # SerializedTree (loss_mode applied)
-    paths: list[dict]                 # linearize_paths() output
-    n_unique: int
-
-
-def _fit_trees(trees: Sequence[TrajectoryTree], seq_len: int,
-               chunk: Optional[int], loss_mode: str = "sep_avg"):
-    """Split trees into (fits-one-row ``_FitTree``s, oversized trees).
-    The filter checks BOTH serializations so tree and baseline modes see
-    the exact same dataset — step-wise loss comparisons stay pure.  Each
-    kept tree carries its serialization and linearized paths so callers
-    never re-serialize."""
-    keep, oversized = [], []
-    for t in trees:
-        ser = serialize_tree(t, chunk_size=chunk, loss_mode=loss_mode)
-        paths = t.linearize_paths()
-        n_path = max(len(p["tokens"]) for p in paths)
-        if chunk:
-            n_path = ((n_path + chunk - 1) // chunk) * chunk
-        if max(ser.n, n_path) <= seq_len:
-            keep.append(_FitTree(tree=t, ser=ser, paths=paths,
-                                 n_unique=t.num_unique_tokens()))
-        else:
-            oversized.append(t)
-    return keep, oversized
+def tree_stream(cfg: ModelConfig, lc: LoaderConfig,
+                num_batches: int) -> Iterator[list[TrajectoryTree]]:
+    """The ingestion stream: one deterministic list of trees per generator
+    batch (seeded per batch so lookahead windows re-slice the same data)."""
+    gk = dict(vocab_size=cfg.vocab_size)
+    gk.update(lc.gen_kwargs or {})
+    for b in range(num_batches):
+        yield trees_for_batch(lc.seed * 100_003 + b,
+                              n_trees=lc.trees_per_batch, kind=lc.kind,
+                              **gk)
 
 
 def step_batches(cfg: ModelConfig, lc: LoaderConfig,
                  num_batches: int) -> Iterator[StepBatch]:
     """Full-fidelity stream: every generated tree is accounted for — it is
     either packed, routed to the partitioned driver (``auto_partition``),
-    or counted in ``dropped``."""
-    chunk = cfg.ssm.chunk_size if needs_chunks(cfg) else None
-    rng = np.random.default_rng(lc.seed)
-    gk = dict(vocab_size=cfg.vocab_size)
-    gk.update(lc.gen_kwargs or {})
-    route = lc.auto_partition and lc.mode == "tree"
-    for b in range(num_batches):
-        trees = trees_for_batch(lc.seed * 100_003 + b,
-                                n_trees=lc.trees_per_batch, kind=lc.kind,
-                                **gk)
-        fits, oversized = _fit_trees(trees, lc.seq_len, chunk,
-                                     lc.loss_mode)
-        dropped = 0 if route else len(oversized)
-        # move the largest trees out until the pack fits the row budget;
-        # only the explicit does-not-fit error is recoverable — anything
-        # else is a packer bug and propagates.  Serializations were
-        # computed once in _fit_trees; each retry just pops the largest.
-        fits = sorted(fits, key=lambda f: f.n_unique)
-        tb = None
-        while fits:
-            try:
-                if lc.mode == "tree":
-                    tb = pack_trees([f.ser for f in fits],
-                                    lc.seq_len, batch_size=lc.batch_rows,
-                                    chunk_size=chunk)
-                else:
-                    tb = pack_linear_paths(
-                        [f.paths for f in fits],
-                        lc.seq_len, batch_size=lc.batch_rows,
-                        chunk_size=chunk, loss_mode=lc.loss_mode)
-                break
-            except DoesNotFitError:
-                if route:
-                    oversized.append(fits[-1].tree)
-                else:
-                    dropped += 1
-                fits = fits[:-1]
-        trees = [f.tree for f in fits]
-        if not route:
-            oversized = []
-        if tb is None and not oversized and dropped == 0:
-            continue
-        inputs = None
-        if tb is not None:
-            extra = None
-            if cfg.frontend is not None:
-                extra = rng.normal(
-                    size=(tb.tokens.shape[0], cfg.frontend_len,
-                          cfg.d_model)).astype(np.float32)
-            # normalize by the step's FULL tree count: oversized trees on
-            # the partition waves share this step's mean-over-trees loss
-            inputs = prepare_batch(
-                cfg, tb, extra,
-                num_trees=len(trees) + len(oversized) if oversized
-                else None)
-        yield StepBatch(inputs=inputs, tb=tb, oversized=oversized,
-                        dropped=dropped,
-                        num_trees=len(trees) + len(oversized))
+    or counted in ``dropped``.  Thin wrapper over the planner's stream."""
+    from repro.train.planner import plan_stream
+
+    for ps in plan_stream(cfg, lc, num_batches):
+        yield ps.step_batch()
 
 
 def batches(cfg: ModelConfig, lc: LoaderConfig,
@@ -164,30 +81,20 @@ def batches(cfg: ModelConfig, lc: LoaderConfig,
 
 
 def execution_plans(cfg: ModelConfig, lc: LoaderConfig, num_batches: int,
-                    *, max_rows: Optional[int] = None):
-    """The loader's unified-engine interface: one ``ExecutionPlan`` per
-    optimizer step — the packed rows as a 1-element execution plus the
-    partition waves of any oversized trees (``auto_partition``), ready
-    for ``TreeTrainEngine.step``.  Steps whose every tree was dropped
-    still yield (an empty plan) so drop accounting reaches the caller."""
-    from repro.core.gateway import build_partition_plan
-    from repro.train.engine import ExecutionPlan, PackedExec
+                    *, max_rows: Optional[int] = None, planner=None):
+    """The unified-engine interface: one ``ExecutionPlan`` per optimizer
+    step — the packed rows as a 1-element execution plus the partition
+    waves of any oversized trees (``auto_partition``), ready for
+    ``TreeTrainEngine.step``.  Steps whose every tree was dropped still
+    yield (an empty plan) so drop accounting reaches the caller.
 
-    cap = lc.capacity or lc.seq_len
-    for sb in step_batches(cfg, lc, num_batches):
-        packed = None
-        if sb.inputs is not None:
-            packed = PackedExec(inputs=sb.inputs,
-                                tokens=int(sb.tb.valid.sum()))
-        partition = None
-        if sb.oversized:
-            partition = build_partition_plan(
-                cfg, sb.oversized, cap, seq_len=lc.seq_len,
-                loss_mode=lc.loss_mode,
-                max_rows=max_rows if max_rows is not None
-                else lc.batch_rows)
-        yield ExecutionPlan(packed=packed, partition=partition,
-                            num_trees=sb.num_trees, dropped=sb.dropped)
+    ``planner`` (a ``train/planner.PlannerConfig``) turns on lookahead
+    scheduling, replica balancing, and the async build pipeline; the
+    default reproduces the per-step schedule."""
+    from repro.train.planner import plan_pipeline
+
+    yield from plan_pipeline(cfg, lc, num_batches, planner,
+                             max_rows=max_rows)
 
 
 def dataset_por(trees: Sequence[TrajectoryTree]) -> float:

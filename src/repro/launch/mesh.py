@@ -32,5 +32,19 @@ def data_axes(multi_pod: bool = False) -> tuple[str, ...]:
 def make_host_mesh():
     """(local_devices, 1) mesh for single-host runs of the launcher: the
     data axis spans every local device, so ``--mesh host`` on a multichip
-    host data-parallelizes instead of pinning everything to device 0."""
+    host data-parallelizes instead of pinning everything to device 0.
+
+    Row divisibility is no longer the user's problem: the plan-ahead
+    scheduler (train/planner) sizes every batch's row count to a multiple
+    of this mesh's data axis (``data_axis_size``); the launcher errors
+    only when the user *forces* an indivisible ``--rows``."""
     return jax.make_mesh((jax.local_device_count(), 1), ("data", "model"))
+
+
+def data_axis_size(mesh, daxes: tuple[str, ...] = ("data",)) -> int:
+    """Number of data-parallel replicas = product of the mesh's data axes
+    — the row multiple the planner balances batches against."""
+    n = 1
+    for a in daxes:
+        n *= mesh.shape[a]
+    return n

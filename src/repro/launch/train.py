@@ -5,13 +5,16 @@ Runs tree-training (or the sep-avg baseline) on synthetic agentic trees:
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-8b --smoke \\
       --steps 50 --mode tree
 
-Every step is an ``ExecutionPlan`` from ``data/loader.execution_plans``
-(packed rows + the partition waves of any oversized trees) executed by
+Every step is an ``ExecutionPlan`` from the plan-ahead scheduler
+(``train/planner``: global cost-model-driven Tree Packing over a
+``--lookahead`` window, replica-balanced rows, ``--plan-workers``
+background builders double-buffered against the device) executed by
 ``train/engine.TreeTrainEngine.step`` — the same code path for all of
 ``--mode tree/baseline`` × ``--auto-partition`` × ``--impl
 ref/chunked/pallas`` × ``--loss-mode sep_avg/uniform/rl``.  Gradients
 accumulate in a donated fp32 device buffer; each step performs exactly
-one host sync (the logging transfer).
+one host sync (the logging transfer).  ``--rows`` defaults to auto: the
+planner picks per-replica row counts sized to the mesh's data axis.
 
 ``--auto-partition`` routes trees larger than one row through
 Redundancy-Free Tree Partitioning (wave-scheduled, ``--capacity`` token
@@ -36,13 +39,14 @@ import jax
 
 from repro import sharding as sh
 from repro.configs import get_config
-from repro.data.loader import LoaderConfig, execution_plans
-from repro.launch.mesh import data_axes, make_host_mesh, \
+from repro.data.loader import LoaderConfig
+from repro.launch.mesh import data_axes, data_axis_size, make_host_mesh, \
     make_production_mesh
 from repro.models.model import init_params
 from repro.train.checkpoint import save_checkpoint
 from repro.train.engine import TreeTrainEngine
 from repro.train.optimizer import OptimizerConfig, init_opt_state
+from repro.train.planner import PlannerConfig, plan_pipeline
 
 
 def main() -> None:
@@ -53,8 +57,17 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--mode", default="tree", choices=["tree", "baseline"])
     ap.add_argument("--seq-len", type=int, default=512)
-    ap.add_argument("--rows", type=int, default=2)
+    ap.add_argument("--rows", type=int, default=None,
+                    help="row budget per step (default: auto — the "
+                         "planner picks the smallest multiple of the "
+                         "mesh's data axis ≥ 2)")
     ap.add_argument("--trees", type=int, default=6)
+    ap.add_argument("--lookahead", type=int, default=1,
+                    help="generator batches the planner bin-packs "
+                         "jointly (global Tree Packing; 1 = per-step)")
+    ap.add_argument("--plan-workers", type=int, default=1,
+                    help="background plan-builder threads (double-"
+                         "buffered against engine.step; 0 = synchronous)")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--impl", default="ref",
                     choices=["ref", "chunked", "pallas"])
@@ -101,16 +114,20 @@ def main() -> None:
 
     if args.mesh == "host":
         mesh, daxes = make_host_mesh(), ("data",)
-        ndata = mesh.shape["data"]
-        if args.rows % ndata:
-            ap.error(f"--rows {args.rows} must be a multiple of the host "
-                     f"mesh's data axis ({ndata} local devices) so batch "
-                     f"rows shard evenly; pick --rows "
-                     f"{((args.rows // ndata) + 1) * ndata} or run fewer "
-                     f"devices")
     else:
         mesh = make_production_mesh(multi_pod=args.mesh == "multi")
         daxes = data_axes(args.mesh == "multi")
+    ndata = data_axis_size(mesh, daxes)
+    if args.rows is None:
+        # planner-chosen rows: one row per replica, minimum 2
+        args.rows = max(2, ndata)
+        print(f"[train] rows auto-chosen: {args.rows} "
+              f"({args.rows // ndata} per replica × {ndata} replicas)")
+    elif args.rows % ndata:
+        ap.error(f"--rows {args.rows} was forced but is not a multiple "
+                 f"of the mesh's data axis ({ndata} replicas) — batch "
+                 f"rows cannot shard evenly; drop --rows to let the "
+                 f"planner choose, or pick a multiple of {ndata}")
 
     opt_cfg = OptimizerConfig(lr=args.lr, total_steps=args.steps,
                               warmup_steps=max(2, args.steps // 10))
@@ -132,13 +149,19 @@ def main() -> None:
         opt_state = init_opt_state(params)
         engine = TreeTrainEngine(cfg, opt_cfg, impl=args.impl)
 
-        tokens_done = part_trees = part_tokens = dropped_total = 0
+        pcfg = PlannerConfig(lookahead=args.lookahead,
+                             plan_workers=args.plan_workers,
+                             num_replicas=ndata, max_rows=args.rows)
+        pipe = plan_pipeline(cfg, lc, args.steps, pcfg)
+
+        tokens_done = padded_total = part_trees = part_tokens = 0
+        dropped_total = 0
         t0 = time.time()
         history = []
         # THE training loop: every step — packed rows, partition waves,
-        # SFT or RL — is one engine.step over its ExecutionPlan
-        for i, plan in enumerate(
-                execution_plans(cfg, lc, args.steps, max_rows=args.rows)):
+        # SFT or RL — is one engine.step over its ExecutionPlan; the
+        # planner builds the NEXT plan on background threads meanwhile
+        for i, plan in enumerate(pipe):
             dropped_total += plan.dropped
             if plan.is_empty:       # nothing trainable this step
                 continue
@@ -146,6 +169,7 @@ def main() -> None:
             params, opt_state, m = engine.step(params, opt_state, plan)
             dt = time.time() - ts
             tokens_done += plan.unique_tokens
+            padded_total += plan.padded_tokens
             part_trees += plan.num_oversized
             if plan.partition is not None and plan.partition.waves:
                 part_tokens += plan.partition.info["unique_tokens"]
@@ -164,6 +188,13 @@ def main() -> None:
               f"{dropped_total} dropped trees, {wall:.1f}s wall "
               f"({engine.host_syncs} host syncs / {engine.steps_done} "
               f"steps)")
+        print(f"[train] plan-ahead: {pipe.built} plans, "
+              f"{pipe.schedule_s * 1e3:.0f}ms scheduled + "
+              f"{pipe.build_s * 1e3:.0f}ms built / "
+              f"{pipe.exposed_s * 1e3:.0f}ms exposed "
+              f"(lookahead {args.lookahead}, {args.plan_workers} workers), "
+              f"{padded_total} padded tokens "
+              f"({padded_total / max(tokens_done, 1):.2f}/unique)")
         if args.auto_partition:
             print(f"[train] partitioned: {part_trees} oversized trees, "
                   f"{part_tokens} tokens, {dropped_total} dropped")

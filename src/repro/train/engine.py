@@ -59,14 +59,15 @@ class PackedExec:
     """One uniform [B, S] microbatch execution (the packed rows)."""
     inputs: dict                 # jnp-ready model inputs (prepare_batch)
     tokens: int = 0              # host-side unique-token count (logging)
+    cells: int = 0               # materialized row cells (B × S)
 
 
 @dataclass
 class ExecutionPlan:
     """Everything one optimizer step trains on, in execution order:
     the packed microbatch (if any) followed by the partition waves of the
-    oversized trees (if any).  Built host-side by ``data/loader`` — the
-    engine only executes."""
+    oversized trees (if any).  Built host-side by the plan-ahead
+    scheduler (``train/planner``) — the engine only executes."""
     packed: Optional[PackedExec] = None
     partition: Optional[PartitionPlan] = None
     num_trees: int = 0           # packed + oversized (loss normalizer)
@@ -87,6 +88,15 @@ class ExecutionPlan:
         if self.partition is not None and self.partition.waves:
             n += self.partition.info["unique_tokens"]
         return n
+
+    @property
+    def padded_tokens(self) -> int:
+        """Materialized row cells holding no unique token — the schedule
+        overhead the plan-ahead cost model minimizes."""
+        cells = 0 if self.packed is None else self.packed.cells
+        if self.partition is not None and self.partition.waves:
+            cells += self.partition.info.get("cells", 0)
+        return cells - self.unique_tokens
 
     @property
     def num_executions(self) -> int:

@@ -1,0 +1,624 @@
+"""Plan-ahead scheduler: global cost-model-driven Tree Packing.
+
+The paper's Tree Packing preserves prefix reuse *within* a step; this
+module owns everything above it — the schedule level:
+
+  lookahead packing   trees from a window of ``lookahead`` generator
+                      batches are bin-packed **globally** into the
+                      window's steps (candidate heuristics scored by
+                      ``core/plan_cost``), instead of first-fit inside
+                      each batch — holes left by one batch are filled by
+                      the next one's trees;
+  replica balance     every emitted batch's row count is a multiple of
+                      the mesh data-axis size and rows are permuted so
+                      contiguous per-replica shards carry non-empty-row
+                      counts within 1 of each other (token loads dealt
+                      snake-wise); partition waves round their bucketed
+                      row counts the same way;
+  oversized balance   trees routed to Redundancy-Free Tree Partitioning
+                      are spread across the window's steps by their
+                      partitioned token load (each tree is partitioned
+                      exactly ONCE — the forest is reused by
+                      ``core/gateway.build_partition_plan``);
+  async pipeline      ``PlanPipeline`` double-buffers the host-side numpy
+                      plan construction against ``TreeTrainEngine.step``
+                      on background threads, so the device never waits on
+                      packing; it tracks built vs *exposed* (consumer-
+                      visible) plan-build time.
+
+Invariants (property-tested in tests/test_planner.py):
+  - token conservation: every generated tree is packed, partitioned, or
+    counted in ``dropped`` — Σ unique tokens is preserved;
+  - parents never schedule later than children (wave topology);
+  - per-replica row-load imbalance ≤ 1 non-empty row.
+
+``data/loader.py`` shrank to tree ingestion; its ``step_batches`` /
+``execution_plans`` are thin wrappers over this module.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field, replace
+from itertools import islice
+from typing import Any, Callable, Iterable, Iterator, Optional, Sequence
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.packing import (DoesNotFitError, pack_linear_paths,
+                                materialize_tree_rows)
+from repro.core.partition import (TreePartition, partition_schedule_load,
+                                  partition_tree)
+from repro.core.plan_cost import (DEFAULT_WEIGHTS, CompileCacheSim,
+                                  CostWeights, PackingCost,
+                                  balanced_row_order, packed_signature,
+                                  round_to_multiple, score_packing)
+from repro.core.tree import TrajectoryTree, serialize_tree
+from repro.data.loader import LoaderConfig, StepBatch, tree_stream
+from repro.models.model import needs_chunks, prepare_batch
+
+
+@dataclass(frozen=True)
+class PlannerConfig:
+    """Schedule-level knobs (the data-level ones live in LoaderConfig)."""
+    lookahead: int = 1            # generator batches planned jointly
+    plan_workers: int = 0         # background plan builders (0 = sync)
+    num_replicas: int = 1         # mesh data-axis size (row multiples)
+    heuristics: tuple = ("ffd", "bfd")   # candidate packings to score
+    block: int = 64               # kernel block for the skip estimate
+    weights: CostWeights = DEFAULT_WEIGHTS
+    max_rows: Optional[int] = None  # wave row cap (None: batch_rows)
+    pipeline_depth: int = 2       # plans buffered ahead (double buffer)
+
+
+@dataclass
+class FitTree:
+    """One row-sized tree with its serialization artifacts, computed ONCE
+    for the whole schedule (fit filter, candidate packings, eviction
+    retries and materialization all reuse it)."""
+    tree: TrajectoryTree
+    ser: Any                      # SerializedTree (loss_mode applied)
+    paths: list[dict]             # linearize_paths() output
+    n_unique: int
+    src: int                      # source generator batch (step index)
+
+
+@dataclass
+class OversizedTree:
+    """A tree routed to the partitioned driver, with its partition forest
+    computed lazily and exactly once (build_partition_plan reuses it)."""
+    tree: TrajectoryTree
+    src: int
+    parts: Optional[list[TreePartition]] = None
+
+    def forest(self, capacity: int, chunk: Optional[int],
+               loss_mode: str) -> list[TreePartition]:
+        if self.parts is None:
+            self.parts = partition_tree(self.tree, capacity,
+                                        chunk_size=chunk,
+                                        loss_mode=loss_mode)
+        return self.parts
+
+    def load(self, capacity: int, chunk: Optional[int],
+             loss_mode: str) -> int:
+        return partition_schedule_load(
+            self.forest(capacity, chunk, loss_mode))["tokens"]
+
+
+# ---------------------------------------------------------------------------
+# Window scheduling: global bin packing + cost-model candidate choice
+# ---------------------------------------------------------------------------
+
+def _fit_split(trees: Sequence[TrajectoryTree], seq_len: int,
+               chunk: Optional[int], loss_mode: str, src: int
+               ) -> tuple[list[FitTree], list[OversizedTree]]:
+    """Split one generator batch into row-sized FitTrees and oversized
+    trees.  The filter checks BOTH serializations so tree and baseline
+    modes see the exact same dataset — step-wise loss comparisons stay
+    pure.  Each tree is serialized exactly once."""
+    keep: list[FitTree] = []
+    over: list[OversizedTree] = []
+    for t in trees:
+        ser = serialize_tree(t, chunk_size=chunk, loss_mode=loss_mode)
+        paths = t.linearize_paths()
+        n_path = max(len(p["tokens"]) for p in paths)
+        if chunk:
+            n_path = ((n_path + chunk - 1) // chunk) * chunk
+        if max(ser.n, n_path) <= seq_len:
+            keep.append(FitTree(tree=t, ser=ser, paths=paths,
+                                n_unique=t.num_unique_tokens(), src=src))
+        else:
+            over.append(OversizedTree(tree=t, src=src))
+    return keep, over
+
+
+def _assign_window(sizes: Sequence[int], num_steps: int, rows_per_step: int,
+                   seq_len: int, heuristic: str
+                   ) -> tuple[Optional[list[list[list[int]]]], Optional[int]]:
+    """Global bin packing of the window's trees into ``num_steps`` steps of
+    ``rows_per_step`` rows each (largest-first).  Returns (per-step rows
+    of item indices, None) on success, or (None, i) where i is the first
+    item that found no slot — since placement is largest-first, i is the
+    largest *unplaceable* item, the right eviction victim (everything
+    bigger provably fits and keeps training)."""
+    rows: list[list[list[int]]] = [[] for _ in range(num_steps)]
+    used: list[list[int]] = [[] for _ in range(num_steps)]
+    order = sorted(range(len(sizes)), key=lambda i: (-sizes[i], i))
+    for i in order:
+        n = sizes[i]
+        if n > seq_len:
+            return None, i
+        best: Optional[tuple[int, int]] = None
+        for s in range(num_steps):
+            for r, u in enumerate(used[s]):
+                if u + n > seq_len:
+                    continue
+                if heuristic == "ffd":
+                    best = (s, r)
+                    break
+                if best is None or u > used[best[0]][best[1]]:
+                    best = (s, r)       # bfd: tightest fitting row
+            if heuristic == "ffd" and best is not None:
+                break
+        if best is None:
+            for s in range(num_steps):
+                if len(rows[s]) < rows_per_step:
+                    best = (s, len(rows[s]))
+                    rows[s].append([])
+                    used[s].append(0)
+                    break
+            if best is None:
+                return None, i
+        s, r = best
+        rows[s][r].append(i)
+        used[s][r] += n
+    return rows, None
+
+
+def _score_window(steps_rows: list[list[list[int]]],
+                  sizes: Sequence[int], rows_per_step: int, seq_len: int,
+                  cache: CompileCacheSim, pc: PlannerConfig
+                  ) -> tuple[PackingCost, list]:
+    """Cost of one candidate window schedule: every non-empty step
+    materializes ``rows_per_step`` rows (empty rows pad to the fixed
+    batch), one packed jit signature per non-empty step."""
+    row_sizes: list[list[int]] = []
+    sigs = []
+    for rows in steps_rows:
+        if not any(rows):
+            continue
+        row_sizes.extend([sizes[i] for i in r] for r in rows)
+        row_sizes.extend([] for _ in range(rows_per_step - len(rows)))
+        sigs.append(packed_signature(rows_per_step, seq_len))
+    cost = score_packing(row_sizes, seq_len, block=pc.block,
+                         signatures=sigs, cache=cache,
+                         weights=pc.weights)
+    return cost, sigs
+
+
+def _schedule_tree_window(
+    fits: list[FitTree], num_steps: int, rows_per_step: int, seq_len: int,
+    cache: CompileCacheSim, pc: PlannerConfig,
+) -> tuple[list[list[list[int]]], list[int], Optional[PackingCost]]:
+    """Choose the window's packed schedule: try every candidate heuristic
+    on the current fit set, score the feasible ones with the cost model,
+    and evict only when NO candidate can hold everything.  The victim is
+    the largest item the candidates could not place — NOT the globally
+    largest tree, which provably fits and keeps training (evicting it
+    could pack *less* data than per-step greedy would).  Returns
+    (per-step rows of fit indices, evicted fit indices, winning cost)."""
+    active = list(range(len(fits)))
+    evicted: list[int] = []
+    while active:
+        sizes = [fits[i].ser.n for i in range(len(fits))]
+        cands = []
+        blocked: list[int] = []
+        for h in pc.heuristics:
+            sub, stuck = _assign_window([sizes[i] for i in active],
+                                        num_steps, rows_per_step, seq_len,
+                                        h)
+            if sub is not None:
+                remap = [[[active[i] for i in r] for r in rows]
+                         for rows in sub]
+                cands.append(remap)
+            else:
+                blocked.append(active[stuck])
+        if cands:
+            best = None
+            for steps_rows in cands:
+                cost, sigs = _score_window(steps_rows, sizes,
+                                           rows_per_step, seq_len, cache,
+                                           pc)
+                if best is None or cost.total < best[0].total:
+                    best = (cost, sigs, steps_rows)
+            cache.commit(best[1])
+            return best[2], evicted, best[0]
+        big = max(blocked, key=lambda i: (fits[i].n_unique, i))
+        active.remove(big)
+        evicted.append(big)
+    return [[] for _ in range(num_steps)], evicted, None
+
+
+def _permute_tb_rows(tb, order: Sequence[int]):
+    """Reorder a TreeBatch's rows (replica load balancing is a pure row
+    permutation — per-row metadata is row-local, so gradients are
+    unchanged)."""
+    if list(order) == list(range(len(order))):
+        return tb
+    idx = np.asarray(order)
+    sl = lambda a: None if a is None else a[idx]
+    from repro.core.packing import TreeBatch
+    return TreeBatch(tokens=tb.tokens[idx], pos_ids=tb.pos_ids[idx],
+                     kv_last=tb.kv_last[idx], weight=tb.weight[idx],
+                     prev_idx=tb.prev_idx[idx], valid=tb.valid[idx],
+                     chunk_parent=sl(tb.chunk_parent),
+                     num_trees=tb.num_trees,
+                     extra_embeds=sl(tb.extra_embeds),
+                     row_trees=sl(tb.row_trees))
+
+
+# ---------------------------------------------------------------------------
+# Planned steps (host-side schedule → materialized batches/plans)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class PlannedStep:
+    """One optimizer step's schedule.  ``step_batch()`` materializes the
+    packed rows (numpy + model inputs); ``execution_plan()`` additionally
+    builds the partition waves — both are cached, so the two loader
+    wrappers share one materialization."""
+    cfg: ModelConfig
+    lc: LoaderConfig
+    pc: PlannerConfig
+    index: int                        # source batch / step index
+    fits: list[FitTree] = field(default_factory=list)
+    rows: list[list[int]] = field(default_factory=list)  # idx into fits
+    oversized: list[OversizedTree] = field(default_factory=list)
+    dropped: int = 0
+    cost: Optional[PackingCost] = None
+    baseline_tb: Any = None           # baseline mode pre-packs paths
+    _sb: Optional[StepBatch] = None
+    _plan: Any = None
+
+    @property
+    def num_trees(self) -> int:
+        return len(self.fits) + len(self.oversized)
+
+    @property
+    def is_empty(self) -> bool:
+        return (not self.fits and not self.oversized
+                and self.dropped == 0)
+
+    # -- packed rows -------------------------------------------------------
+    def step_batch(self) -> StepBatch:
+        if self._sb is not None:
+            return self._sb
+        cfg, lc, pc = self.cfg, self.lc, self.pc
+        chunk = cfg.ssm.chunk_size if needs_chunks(cfg) else None
+        tb = None
+        if self.baseline_tb is not None:
+            # baseline rows get the same replica balance as tree rows
+            tb = _permute_tb_rows(
+                self.baseline_tb,
+                balanced_row_order(
+                    [int(v) for v in self.baseline_tb.valid.sum(axis=1)],
+                    pc.num_replicas))
+        elif any(self.rows):
+            B = round_to_multiple(lc.batch_rows, pc.num_replicas)
+            rows = [list(r) for r in self.rows]
+            rows.extend([] for _ in range(B - len(rows)))
+            loads = [sum(self.fits[i].ser.n for i in r) for r in rows]
+            order = balanced_row_order(loads, pc.num_replicas)
+            rows = [rows[r] for r in order]
+            tb = materialize_tree_rows([f.ser for f in self.fits], rows,
+                                       lc.seq_len, chunk_size=chunk)
+        inputs = None
+        if tb is not None:
+            extra = None
+            if cfg.frontend is not None:
+                rng = np.random.default_rng(
+                    [lc.seed, 7919, self.index])
+                extra = rng.normal(
+                    size=(tb.tokens.shape[0], cfg.frontend_len,
+                          cfg.d_model)).astype(np.float32)
+            # normalize by the step's FULL tree count: oversized trees on
+            # the partition waves share this step's mean-over-trees loss
+            inputs = prepare_batch(
+                cfg, tb, extra,
+                num_trees=self.num_trees if self.oversized else None)
+        self._sb = StepBatch(inputs=inputs, tb=tb,
+                             oversized=[o.tree for o in self.oversized],
+                             dropped=self.dropped,
+                             num_trees=self.num_trees)
+        return self._sb
+
+    # -- full execution plan ----------------------------------------------
+    def execution_plan(self):
+        if self._plan is not None:
+            return self._plan
+        from repro.core.gateway import build_partition_plan
+        from repro.train.engine import ExecutionPlan, PackedExec
+
+        cfg, lc, pc = self.cfg, self.lc, self.pc
+        chunk = cfg.ssm.chunk_size if needs_chunks(cfg) else None
+        cap = lc.capacity or lc.seq_len
+        sb = self.step_batch()
+        packed = None
+        if sb.inputs is not None:
+            B, S = sb.tb.tokens.shape
+            packed = PackedExec(inputs=sb.inputs,
+                                tokens=int(sb.tb.valid.sum()),
+                                cells=B * S)
+        partition = None
+        if self.oversized:
+            partition = build_partition_plan(
+                cfg, [o.tree for o in self.oversized], cap,
+                seq_len=lc.seq_len, loss_mode=lc.loss_mode,
+                max_rows=(pc.max_rows if pc.max_rows is not None
+                          else lc.batch_rows),
+                row_multiple=pc.num_replicas,
+                forest=[o.forest(cap, chunk, lc.loss_mode)
+                        for o in self.oversized])
+        self._plan = ExecutionPlan(packed=packed, partition=partition,
+                                   num_trees=self.num_trees,
+                                   dropped=self.dropped)
+        return self._plan
+
+
+# ---------------------------------------------------------------------------
+# The schedule stream
+# ---------------------------------------------------------------------------
+
+def plan_window(cfg: ModelConfig, lc: LoaderConfig, pc: PlannerConfig,
+                window: Sequence[Sequence[TrajectoryTree]],
+                cache: Optional[CompileCacheSim] = None,
+                first_index: int = 0) -> list[PlannedStep]:
+    """Schedule one lookahead window (``window[b]`` = generator batch b's
+    trees) into ``len(window)`` PlannedSteps.  Pure host-side decisions —
+    nothing is materialized yet."""
+    chunk = cfg.ssm.chunk_size if needs_chunks(cfg) else None
+    route = lc.auto_partition and lc.mode == "tree"
+    cap = lc.capacity or lc.seq_len
+    cache = cache if cache is not None else CompileCacheSim()
+    W = len(window)
+    rows_per_step = round_to_multiple(lc.batch_rows, pc.num_replicas)
+
+    fits: list[FitTree] = []
+    over: list[OversizedTree] = []
+    for s, trees in enumerate(window):
+        f, o = _fit_split(trees, lc.seq_len, chunk, lc.loss_mode,
+                          first_index + s)
+        fits.extend(f)
+        over.extend(o)
+
+    steps = [PlannedStep(cfg=cfg, lc=lc, pc=pc, index=first_index + s)
+             for s in range(W)]
+
+    if lc.mode == "tree":
+        steps_rows, evicted, cost = _schedule_tree_window(
+            fits, W, rows_per_step, lc.seq_len, cache, pc)
+        over = over + [OversizedTree(tree=fits[i].tree, src=fits[i].src)
+                       for i in evicted]
+        for s in range(W):
+            placed = sorted({i for r in steps_rows[s] for i in r})
+            local = {i: j for j, i in enumerate(placed)}
+            steps[s].fits = [fits[i] for i in placed]
+            steps[s].rows = [[local[i] for i in r]
+                             for r in steps_rows[s]]
+            steps[s].cost = cost
+    else:
+        # baseline mode: per-batch path packing (kept comparable with the
+        # tree mode stream — no cross-batch shuffling of the baseline)
+        by_src: dict[int, list[FitTree]] = {}
+        for f in fits:
+            by_src.setdefault(f.src, []).append(f)
+        for s in range(W):
+            kept = sorted(by_src.get(first_index + s, []),
+                          key=lambda f: f.n_unique)
+            while kept:
+                try:
+                    steps[s].baseline_tb = pack_linear_paths(
+                        [f.paths for f in kept], lc.seq_len,
+                        batch_size=rows_per_step, chunk_size=chunk,
+                        loss_mode=lc.loss_mode)
+                    break
+                except DoesNotFitError:
+                    over.append(OversizedTree(tree=kept[-1].tree,
+                                              src=first_index + s))
+                    kept = kept[:-1]
+            steps[s].fits = kept
+
+    # ---- oversized routing / drop accounting -----------------------------
+    if route:
+        if W == 1 or len(over) <= 1:
+            for o in over:
+                steps[o.src - first_index].oversized.append(o)
+        else:
+            # balance partitioned token load across the window's steps
+            loads = [0] * W
+            for o in sorted(over,
+                            key=lambda o: -o.load(cap, chunk,
+                                                  lc.loss_mode)):
+                s = min(range(W), key=lambda s_: (loads[s_], s_))
+                steps[s].oversized.append(o)
+                loads[s] += o.load(cap, chunk, lc.loss_mode)
+    else:
+        for o in over:
+            steps[o.src - first_index].dropped += 1
+    return steps
+
+
+def plan_stream(cfg: ModelConfig, lc: LoaderConfig, num_batches: int,
+                pc: Optional[PlannerConfig] = None
+                ) -> Iterator[PlannedStep]:
+    """The scheduler's main stream: ingest trees (data/loader), plan each
+    lookahead window globally, yield non-empty PlannedSteps in step
+    order.  All decisions are deterministic in (cfg, lc, pc, seed)."""
+    pc = pc or PlannerConfig()
+    cache = CompileCacheSim()
+    W = max(1, pc.lookahead)
+    gen = tree_stream(cfg, lc, num_batches)
+    first = 0
+    while first < num_batches:
+        window = list(islice(gen, min(W, num_batches - first)))
+        if not window:
+            break
+        for ps in plan_window(cfg, lc, pc, window, cache=cache,
+                              first_index=first):
+            if not ps.is_empty:
+                yield ps
+        first += len(window)
+
+
+# ---------------------------------------------------------------------------
+# Async double-buffered plan pipeline
+# ---------------------------------------------------------------------------
+
+class PlanPipeline:
+    """Builds plans on background threads while the consumer (the train
+    loop / engine) executes the previous one — the host-side numpy plan
+    construction is double-buffered against device work.
+
+    ``workers=0`` degrades to synchronous in-line building (every
+    scheduling/build second is exposed).  With workers ≥ 1, the
+    *scheduling* iterator is pulled under its own lock — never the
+    result lock, so a long window-scheduling pull cannot block the
+    consumer from popping an already-built plan — and the expensive
+    materialization (``build``) runs outside both; results are
+    re-ordered by sequence number, at most ``depth + workers`` plans
+    in flight ahead of the consumer.
+
+    Stats: ``schedule_s`` (source-pull seconds: fit + window packing),
+    ``build_s`` (materialization seconds, possibly overlapped),
+    ``exposed_s`` (seconds the consumer actually waited), ``built``."""
+
+    def __init__(self, source: Iterable, build: Callable[[Any], Any],
+                 workers: int = 1, depth: int = 2):
+        self._source = iter(source)
+        self._build = build
+        self._workers = max(0, workers)
+        self._depth = max(1, depth)
+        self.schedule_s = 0.0
+        self.build_s = 0.0
+        self.exposed_s = 0.0
+        self.built = 0
+        if self._workers:
+            self._cv = threading.Condition()
+            self._pull_lock = threading.Lock()
+            self._results: dict[int, tuple[str, Any]] = {}
+            self._next_pull = 0
+            self._next_out = 0
+            self._exhausted = False
+            self._stop = False
+            self._threads = [
+                threading.Thread(target=self._work, daemon=True,
+                                 name=f"plan-builder-{i}")
+                for i in range(self._workers)]
+            for t in self._threads:
+                t.start()
+
+    # -- worker side -------------------------------------------------------
+    def _work(self) -> None:
+        while True:
+            with self._cv:
+                while (not self._stop and not self._exhausted
+                       and self._next_pull - self._next_out
+                       >= self._depth + self._workers):
+                    self._cv.wait()
+                if self._stop or self._exhausted:
+                    return
+            # the scheduling pull serializes on its own lock; _cv stays
+            # free for consumer pops of already-built plans
+            with self._pull_lock:
+                with self._cv:
+                    if self._stop or self._exhausted:
+                        return
+                t0 = time.perf_counter()
+                try:
+                    item = self._source.__next__()
+                except StopIteration:
+                    with self._cv:
+                        self._exhausted = True
+                        self._cv.notify_all()
+                    return
+                except BaseException as e:  # scheduling error: re-raise in order
+                    with self._cv:
+                        self._results[self._next_pull] = ("err", e)
+                        self._next_pull += 1
+                        self._exhausted = True
+                        self._cv.notify_all()
+                    return
+                dt = time.perf_counter() - t0
+                with self._cv:      # seq assignment in pull order
+                    seq = self._next_pull
+                    self._next_pull += 1
+                    self.schedule_s += dt
+            t0 = time.perf_counter()
+            try:
+                out = ("ok", self._build(item))
+            except BaseException as e:
+                out = ("err", e)
+            dt = time.perf_counter() - t0
+            with self._cv:
+                self._results[seq] = out
+                self.build_s += dt
+                self.built += 1
+                self._cv.notify_all()
+
+    def close(self) -> None:
+        if self._workers:
+            with self._cv:
+                self._stop = True
+                self._cv.notify_all()
+
+    # -- consumer side -----------------------------------------------------
+    def __iter__(self) -> Iterator:
+        if self._workers == 0:
+            while True:
+                t0 = time.perf_counter()
+                try:
+                    item = self._source.__next__()
+                except StopIteration:
+                    return
+                t1 = time.perf_counter()
+                plan = self._build(item)
+                t2 = time.perf_counter()
+                self.schedule_s += t1 - t0
+                self.build_s += t2 - t1
+                self.exposed_s += t2 - t0
+                self.built += 1
+                yield plan
+        try:
+            while True:
+                t0 = time.perf_counter()
+                with self._cv:
+                    while (self._next_out not in self._results
+                           and not (self._exhausted
+                                    and self._next_pull <= self._next_out)):
+                        self._cv.wait()
+                    self.exposed_s += time.perf_counter() - t0
+                    if self._next_out not in self._results:
+                        return                      # stream exhausted
+                    kind, val = self._results.pop(self._next_out)
+                    self._next_out += 1
+                    self._cv.notify_all()
+                if kind == "err":
+                    raise val
+                yield val
+        finally:
+            self.close()
+
+
+def plan_pipeline(cfg: ModelConfig, lc: LoaderConfig, num_batches: int,
+                  pc: Optional[PlannerConfig] = None, *,
+                  max_rows: Optional[int] = None) -> PlanPipeline:
+    """ExecutionPlan stream behind the async pipeline: schedule on the
+    source iterator, build (materialize rows + partition waves + device-
+    ready inputs) on ``plan_workers`` background threads."""
+    pc = pc or PlannerConfig()
+    if max_rows is not None and pc.max_rows is None:
+        pc = replace(pc, max_rows=max_rows)
+    return PlanPipeline(plan_stream(cfg, lc, num_batches, pc),
+                        lambda ps: ps.execution_plan(),
+                        workers=pc.plan_workers, depth=pc.pipeline_depth)

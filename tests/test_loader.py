@@ -161,38 +161,33 @@ def test_default_mode_counts_drops():
 # ---------------------------------------------------------------------------
 
 def test_loader_serializes_each_tree_exactly_once(monkeypatch):
-    import repro.data.loader as loader_mod
+    import repro.train.planner as planner_mod
     from repro.core.tree import serialize_tree as real_ser
 
-    calls = {"ser": 0, "retries": 0}
+    calls = {"ser": 0}
 
     def counting_ser(*a, **kw):
         calls["ser"] += 1
         return real_ser(*a, **kw)
 
-    real_pack = loader_mod.pack_trees
-
-    def counting_pack(*a, **kw):
-        try:
-            return real_pack(*a, **kw)
-        except DoesNotFitError:
-            calls["retries"] += 1
-            raise
-
-    monkeypatch.setattr(loader_mod, "serialize_tree", counting_ser)
-    monkeypatch.setattr(loader_mod, "pack_trees", counting_pack)
+    monkeypatch.setattr(planner_mod, "serialize_tree", counting_ser)
     cfg = tiny_cfg("dense")
     steps, per_batch = 4, 5
-    # tight rows so the does-not-fit retry loop actually fires
+    # tight rows so the planner's eviction loop actually fires
     lc = LoaderConfig(seq_len=96, batch_rows=1, trees_per_batch=per_batch,
                       mode="tree", kind="agentic", seed=5,
                       auto_partition=True,
                       gen_kwargs=dict(turn_len_range=(4, 12), num_turns=2))
+    evicted = 0
     for sb in step_batches(cfg, lc, steps):
-        pass
-    assert calls["retries"] > 0, \
-        "config never exercised the does-not-fit retry loop"
+        # an oversized tree that individually fits one row can only be
+        # there because the planner evicted it to make the step fit
+        evicted += sum(serialize_tree(t).n <= lc.seq_len
+                       for t in sb.oversized)
+    assert evicted > 0, \
+        "config never exercised the planner's eviction loop"
     # one serialize_tree call per generated tree, no matter how many
-    # pack retries happened (partitioning oversized trees serializes
-    # inside core/partition, not through the loader)
+    # candidate packings or eviction retries the planner tried
+    # (partitioning oversized trees serializes inside core/partition,
+    # not through the scheduler)
     assert calls["ser"] == steps * per_batch
