@@ -27,6 +27,11 @@ the same rows as a JSON artifact for CI:
                      unique tokens of global lookahead packing vs greedy
                      per-step first-fit, plus plan-build ms overlapped vs
                      exposed behind engine steps (async pipeline)
+  rl_service         §2 RL model-update — the closed async rollout→tree→
+                     train loop: shared-prefix KV prefill savings (each
+                     group's prefix computed exactly once), generation
+                     overlap fraction behind training, bounded staleness,
+                     zero dropped trees
 
 Flags:
   --smoke      tiny qwen1.5-0.5B-scale config, CPU-interpret friendly,
@@ -387,9 +392,9 @@ def bench_engine_step(smoke: bool = False, impl: str = "ref") -> None:
     combine).  Also asserts the engine's host-sync discipline: ≤ 1
     device→host sync per optimizer step."""
     from repro.core.gateway import packed_partitioned_value_and_grad
-    from repro.data.loader import LoaderConfig, execution_plans, \
-        step_batches
+    from repro.data.loader import LoaderConfig
     from repro.train.engine import TreeTrainEngine
+    from repro.train.planner import plans as plan_steps
     from repro.train.optimizer import (OptimizerConfig, adamw_update,
                                        init_opt_state)
     from repro.train.train_step import make_grad_fn
@@ -408,10 +413,14 @@ def bench_engine_step(smoke: bool = False, impl: str = "ref") -> None:
     opt_cfg = OptimizerConfig(lr=1e-3, warmup_steps=2, total_steps=steps)
     params = init_params(cfg, jax.random.key(0))
 
-    plans = [p for p in execution_plans(cfg, lc, steps) if not p.is_empty]
-    sbs = [sb for sb in step_batches(cfg, lc, steps)
-           if sb.inputs is not None or sb.oversized]
-    n_oversized = sum(p.num_oversized for p in plans)
+    # one planner stream materializes both views of the same schedule
+    pss = list(plan_steps(cfg, lc, steps))
+    eplans = [ps.execution_plan() for ps in pss
+              if not ps.execution_plan().is_empty]
+    sbs = [ps.step_batch() for ps in pss
+           if ps.step_batch().inputs is not None
+           or ps.step_batch().oversized]
+    n_oversized = sum(p.num_oversized for p in eplans)
 
     # ---- unified engine ---------------------------------------------------
     # warm pass over EVERY plan first: each step can carry differently
@@ -419,17 +428,17 @@ def bench_engine_step(smoke: bool = False, impl: str = "ref") -> None:
     engine = TreeTrainEngine(cfg, opt_cfg, impl=impl, donate=False)
     opt = init_opt_state(params)
     p_e = params
-    for plan in plans:
+    for plan in eplans:
         p_e, opt, _ = engine.step(p_e, opt, plan)
     syncs0, steps0 = engine.host_syncs, engine.steps_done
     opt = init_opt_state(params)
     p_e = params
     t0 = time.perf_counter()
     loss_e = 0.0
-    for plan in plans:
+    for plan in eplans:
         p_e, opt, m = engine.step(p_e, opt, plan)
         loss_e = m["loss"]
-    t_engine = (time.perf_counter() - t0) / len(plans)
+    t_engine = (time.perf_counter() - t0) / len(eplans)
     syncs_per_step = (engine.host_syncs - syncs0) / (engine.steps_done
                                                      - steps0)
     assert syncs_per_step <= 1.0, syncs_per_step
@@ -443,8 +452,9 @@ def bench_engine_step(smoke: bool = False, impl: str = "ref") -> None:
         n = max(sb.num_trees, 1)
         loss, grads = 0.0, None
         if sb.inputs is not None:
-            sb.inputs["num_trees"] = n
-            li, grads, _ = gfn(p, sb.inputs)
+            inputs = dict(sb.inputs)      # the engine shares this dict
+            inputs["num_trees"] = n
+            li, grads, _ = gfn(p, inputs)
             loss += float(li)
         if sb.oversized:
             l_p, g_p, _ = packed_partitioned_value_and_grad(
@@ -471,7 +481,7 @@ def bench_engine_step(smoke: bool = False, impl: str = "ref") -> None:
 
     emit("engine_step", t_engine * 1e6,
          f"two_branch_us={t_two * 1e6:.1f} "
-         f"speedup={t_two / t_engine:.2f}x steps={len(plans)} "
+         f"speedup={t_two / t_engine:.2f}x steps={len(eplans)} "
          f"oversized={n_oversized} host_syncs_per_step={syncs_per_step:.1f} "
          f"loss_rel={abs(loss_e - loss_r) / max(abs(loss_r), 1e-9):.1e}")
 
@@ -550,6 +560,109 @@ def bench_plan_efficiency(smoke: bool = False, impl: str = "ref") -> None:
 
 
 # ---------------------------------------------------------------------------
+# the closed async RL loop — prefix-KV reuse + generation/training overlap
+# ---------------------------------------------------------------------------
+
+def bench_rl_service(smoke: bool = False, impl: str = "ref") -> None:
+    """The async tree-RL service end to end (launch/rl_loop's machinery):
+    a generator thread decodes K-branch rollout groups off ONE shared-
+    prefix KV prefill per group, merges them into advantage trees, and
+    streams them through the live planner into engine steps.
+
+    Reported: per-step wall time, the prefix compute saved by KV reuse
+    (per-group token accounting — asserted exact: each prefix computed
+    once, never K times), and the fraction of generation hidden behind
+    training.  Also asserts zero dropped trees and the bounded-staleness
+    contract (lag ≤ max_ahead + lookahead − 1)."""
+    from repro.data.loader import LoaderConfig
+    from repro.serve.rollout import RolloutConfig, rollout_group
+    from repro.serve.service import (AsyncTreeRLService, ServiceConfig,
+                                     WeightStore)
+    from repro.train.engine import TreeTrainEngine
+    from repro.train.optimizer import OptimizerConfig, init_opt_state
+    from repro.train.planner import PlannerConfig, plan_window
+    from repro.train.planner import plans as plan_steps
+
+    if smoke:
+        cfg = bench_model(n_layers=2, d_model=64)
+        steps, groups = 4, 2
+        rc = RolloutConfig(k=4, prompt_len=8, max_new=4, impl=impl)
+    else:
+        cfg = bench_model(n_layers=2)
+        steps, groups = 6, 2
+        rc = RolloutConfig(k=4, prompt_len=16, max_new=8, impl=impl)
+    seq_len = rc.prompt_len + rc.k * rc.max_new   # any tree fits: 0 drops
+    lc = LoaderConfig(seq_len=seq_len, batch_rows=2, trees_per_batch=groups,
+                      mode="tree", seed=17, loss_mode="rl",
+                      auto_partition=True)
+    pcfg = PlannerConfig(lookahead=1, plan_workers=1, max_rows=2)
+    sc = ServiceConfig(groups_per_step=groups, max_ahead_steps=1,
+                       rollout=rc, seed=17)
+    opt_cfg = OptimizerConfig(lr=1e-3, warmup_steps=2, total_steps=steps)
+    params = init_params(cfg, jax.random.key(0))
+
+    # warm every executable outside the measured loop (as launch/rl_loop
+    # does): rollout prefill/decode-scan, the packed train step + two
+    # optimizer updates, then a rollout against post-update buffer
+    # layouts — so compiles neither starve the generator thread nor
+    # masquerade as exposed generation time
+    wtrees = [rollout_group(cfg, params,
+                            np.zeros(rc.prompt_len, np.int32) + g, rc,
+                            jax.random.key(g))[0] for g in range(groups)]
+    wsteps = [ps for ps in plan_window(cfg, lc, pcfg, [wtrees])
+              if not ps.is_empty]
+    weng = TreeTrainEngine(cfg, opt_cfg, impl=impl)
+    p2 = jax.tree.map(jnp.copy, params)
+    o2 = init_opt_state(p2)
+    for _ in range(2):
+        p2, o2, _ = weng.step(p2, o2, wsteps[0].execution_plan())
+    rollout_group(cfg, jax.tree.map(jnp.copy, p2),
+                  np.zeros(rc.prompt_len, np.int32), rc, jax.random.key(0))
+    del p2, o2
+
+    store = WeightStore(params, version=0)
+    engine = TreeTrainEngine(cfg, opt_cfg, impl=impl, weight_store=store)
+    opt = init_opt_state(params)
+    svc = AsyncTreeRLService(cfg, store, sc, num_steps=steps).start()
+    pipe = plan_steps(cfg, lc, svc.tree_batches(), pcfg)
+
+    dropped = n_steps = 0
+    t0 = time.perf_counter()
+    for ps in pipe:
+        plan = ps.execution_plan()
+        dropped += plan.dropped
+        if plan.is_empty:
+            continue
+        params, opt, _ = engine.step(params, opt, plan)
+        n_steps += 1
+    svc.join(10)
+    wall = time.perf_counter() - t0
+
+    st = svc.stats
+    # the acceptance numbers: prefix computed once per group, zero drops,
+    # staleness inside the bound
+    assert st.prefill_tokens == steps * groups * rc.prompt_len
+    assert st.saved_prefill_tokens == \
+        steps * groups * (rc.k - 1) * rc.prompt_len
+    assert dropped == 0, dropped
+    bound = sc.max_ahead_steps + pcfg.lookahead - 1
+    assert engine.max_lag_seen <= bound, (engine.max_lag_seen, bound)
+    exposed = pipe.exposed_s
+    overlap = 1.0 - exposed / max(st.gen_busy_s, 1e-9)
+    saved_frac = st.saved_prefill_tokens / max(
+        st.saved_prefill_tokens + st.prefill_tokens, 1)
+    emit("rl_service", wall * 1e6 / max(n_steps, 1),
+         f"steps={n_steps} k={rc.k} groups={groups} "
+         f"prefill_tok={st.prefill_tokens} "
+         f"saved_prefill_tok={st.saved_prefill_tokens} "
+         f"saved_prefill_frac={saved_frac:.2f} "
+         f"gen_busy_ms={st.gen_busy_s * 1e3:.1f} "
+         f"gen_exposed_ms={exposed * 1e3:.1f} "
+         f"overlap_frac={max(overlap, 0.0):.2f} "
+         f"max_lag={engine.max_lag_seen} dropped={dropped}")
+
+
+# ---------------------------------------------------------------------------
 # --smoke — tiny model fwd+bwd through the packed tree loss (CI gate)
 # ---------------------------------------------------------------------------
 
@@ -598,6 +711,7 @@ def main(argv=None) -> None:
         bench_gateway_impl(smoke=True)
         bench_engine_step(smoke=True, impl=args.impl)
         bench_plan_efficiency(smoke=True, impl=args.impl)
+        bench_rl_service(smoke=True, impl=args.impl)
     else:
         bench_por_sweep(args.impl)
         bench_partition_tokens()
@@ -610,6 +724,7 @@ def main(argv=None) -> None:
         bench_gateway_impl()
         bench_engine_step(impl=args.impl)
         bench_plan_efficiency(impl=args.impl)
+        bench_rl_service(impl=args.impl)
     if args.out:
         artifact = {
             "smoke": args.smoke,

@@ -1,18 +1,17 @@
-"""Serving demo: batched decode with a shared prompt prefix.
+"""Serving demo: K branch decodes off one shared, prefilled prompt.
 
-The tree-training insight applied at inference: N requests sharing a
-system-prompt prefix decode against one cache whose prefix slots were
-prefilled once (prefix caching — the inference-side sibling the paper
-builds on, §2).  Decodes 4 continuations of one shared prompt.
+The tree-training insight applied at inference (paper §2): the session
+prefills the shared prompt ONCE — a single tree-kernel forward over the
+whole prefix — then ``fork`` splits K branches that reuse the cached
+prefix KV without recomputing a single prefix token.
 
 Run:  PYTHONPATH=src python examples/serve_tree_prefix.py
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.serve.decode import decode_step, init_cache
+from repro.serve.session import DecodeSession
 
 cfg = get_config("qwen2-1.5b", smoke=True)
 from repro.models.model import init_params  # noqa: E402
@@ -20,30 +19,28 @@ from repro.models.model import init_params  # noqa: E402
 params = init_params(cfg, jax.random.key(0))
 rng = np.random.default_rng(0)
 
-B, PREFIX, GEN, T = 4, 24, 16, 64
+K, PREFIX, GEN, T = 4, 24, 16, 64
 shared_prompt = rng.integers(0, cfg.vocab_size, PREFIX).astype(np.int32)
 
-# prefill the shared prefix ONCE (batch dim broadcast: identical KV rows —
-# a production server would store one copy; jnp broadcasting shares it)
-cache = init_cache(cfg, B, T)
-step = jax.jit(lambda c, t, p, w: decode_step(cfg, params, c, t, p, w))
-for t in range(PREFIX):
-    toks = jnp.broadcast_to(jnp.asarray([[shared_prompt[t]]]), (B, 1))
-    logits, cache = step(cache, toks, jnp.full((B,), t, jnp.int32),
-                         jnp.asarray(t, jnp.int32))
+# prefill the shared prefix ONCE: one parallel forward, K-way reuse
+session = DecodeSession.create(cfg, params, buf_len=T)
+session.prefill(shared_prompt)
+branches = session.fork(K)     # shares the prefix KV — no recompute
 
-# then 4 requests branch: greedy decode with different first tokens
-cur = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, 1)), jnp.int32)
-outs = [np.asarray(cur[:, 0])]
-for t in range(PREFIX, PREFIX + GEN):
-    logits, cache = step(cache, cur, jnp.full((B,), t, jnp.int32),
-                         jnp.asarray(t, jnp.int32))
-    cur = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    outs.append(np.asarray(cur[:, 0]))
+# the K branches diverge: greedy decode from different first tokens
+cur = rng.integers(0, cfg.vocab_size, K).astype(np.int32)
+outs = [cur]
+for _ in range(GEN):
+    logits = branches.step(cur)
+    cur = np.asarray(logits.argmax(-1), np.int32)
+    outs.append(cur)
 
 gen = np.stack(outs, 1)
-print(f"shared prefix: {PREFIX} tokens (prefilled once for {B} requests)")
-for b in range(B):
-    print(f"request {b}: {gen[b].tolist()}")
+st = session.stats
+print(f"shared prefix: {PREFIX} tokens, prefilled once for {K} branches "
+      f"(prefill_tokens={st.prefill_tokens}, "
+      f"saved={K * PREFIX - st.prefill_tokens})")
+for b in range(K):
+    print(f"branch {b}: {gen[b].tolist()}")
 print("decode OK — per-step logits finite:",
       bool(np.isfinite(np.asarray(logits)).all()))

@@ -9,9 +9,10 @@ This module owns the *data* side only: generator configuration
 per-step data container (``StepBatch``).  Everything schedule-shaped —
 which trees share a step, row assignment, eviction/drop accounting,
 oversized routing, replica balancing — lives in the plan-ahead scheduler
-(``train/planner.py``); ``step_batches`` and ``execution_plans`` are thin
-wrappers over its stream, so the fit/pack/drop accounting exists exactly
-once.
+(``train/planner.py``).  ``step_batches`` and ``execution_plans`` are
+*deprecated* (one-release warning) in favour of the planner's single
+``plans(cfg, lc, source)`` entrypoint, which also accepts a live rollout
+queue in place of a batch count.
 """
 from __future__ import annotations
 
@@ -63,11 +64,17 @@ def tree_stream(cfg: ModelConfig, lc: LoaderConfig,
 
 def step_batches(cfg: ModelConfig, lc: LoaderConfig,
                  num_batches: int) -> Iterator[StepBatch]:
-    """Full-fidelity stream: every generated tree is accounted for — it is
-    either packed, routed to the partitioned driver (``auto_partition``),
-    or counted in ``dropped``.  Thin wrapper over the planner's stream."""
+    """Deprecated: use ``train.planner.plans(cfg, lc, num_batches)`` and
+    call ``.step_batch()`` on each yielded PlannedStep."""
+    import warnings
+
     from repro.train.planner import plan_stream
 
+    warnings.warn(
+        "data.loader.step_batches is deprecated and will be removed next "
+        "release; use train.planner.plans(cfg, lc, source) — each "
+        "PlannedStep exposes .step_batch()", DeprecationWarning,
+        stacklevel=2)
     for ps in plan_stream(cfg, lc, num_batches):
         yield ps.step_batch()
 
@@ -75,26 +82,30 @@ def step_batches(cfg: ModelConfig, lc: LoaderConfig,
 def batches(cfg: ModelConfig, lc: LoaderConfig,
             num_batches: int) -> Iterator[tuple[dict, TreeBatch]]:
     """Yields (model_inputs, raw TreeBatch) pairs (packed stream only)."""
-    for sb in step_batches(cfg, lc, num_batches):
+    from repro.train.planner import plan_stream
+
+    for ps in plan_stream(cfg, lc, num_batches):
+        sb = ps.step_batch()
         if sb.inputs is not None:
             yield sb.inputs, sb.tb
 
 
 def execution_plans(cfg: ModelConfig, lc: LoaderConfig, num_batches: int,
                     *, max_rows: Optional[int] = None, planner=None):
-    """The unified-engine interface: one ``ExecutionPlan`` per optimizer
-    step — the packed rows as a 1-element execution plus the partition
-    waves of any oversized trees (``auto_partition``), ready for
-    ``TreeTrainEngine.step``.  Steps whose every tree was dropped still
-    yield (an empty plan) so drop accounting reaches the caller.
+    """Deprecated: use ``train.planner.plans(cfg, lc, num_batches)`` and
+    call ``.execution_plan()`` on each yielded PlannedStep (also accepts
+    a live tree source in place of the batch count)."""
+    import warnings
 
-    ``planner`` (a ``train/planner.PlannerConfig``) turns on lookahead
-    scheduling, replica balancing, and the async build pipeline; the
-    default reproduces the per-step schedule."""
-    from repro.train.planner import plan_pipeline
+    from repro.train.planner import plans
 
-    yield from plan_pipeline(cfg, lc, num_batches, planner,
-                             max_rows=max_rows)
+    warnings.warn(
+        "data.loader.execution_plans is deprecated and will be removed "
+        "next release; use train.planner.plans(cfg, lc, source) — each "
+        "PlannedStep exposes .execution_plan()", DeprecationWarning,
+        stacklevel=2)
+    for ps in plans(cfg, lc, num_batches, planner, max_rows=max_rows):
+        yield ps.execution_plan()
 
 
 def dataset_por(trees: Sequence[TrajectoryTree]) -> float:

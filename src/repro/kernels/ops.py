@@ -116,3 +116,45 @@ def tree_attention(q, k, v, kv_last, scale: float,
             pos_k = jnp.pad(pos_k, ((0, 0), (0, pad)))
     return _tree_attention(q, k, v, kv_last, pos_q, pos_k,
                            scale, window, q_off, block_q, block_k)
+
+
+def prefill_attention(q, k, v, scale: float, *,
+                      ctx_k: Optional[jax.Array] = None,
+                      ctx_v: Optional[jax.Array] = None,
+                      ctx_valid: Optional[jax.Array] = None,
+                      window: Optional[int] = None,
+                      pos_q: Optional[jax.Array] = None,
+                      ctx_pos: Optional[jax.Array] = None,
+                      block_q: int = 128, block_k: int = 128):
+    """Shared-prefix prefill through the fused tree kernel.
+
+    The decode-session prefill shape: S new chain tokens (q: [B,S,H,hd],
+    their already-roped keys/values k/v: [B,S,Kh,hd]) attend causally to
+    themselves plus ``ctx_k``/``ctx_v`` [B,A,Kh,hd] — a previously
+    prefilled (possibly forked) prefix whose KV was computed ONCE and is
+    visible everywhere ``ctx_valid`` [B,A] holds.  That is exactly the
+    partition-gateway layout, so it lowers to ``tree_attention`` with
+    ``q_off=A``: no re-scoring of the context against itself, and the
+    same Pallas kernel that trains the tree serves its rollouts.
+    ``window`` adds the sliding-window term over ``pos_q`` [B,S] /
+    ``ctx_pos`` [B,A] absolute positions.  Returns [B,S,H,hd]."""
+    B, S = q.shape[:2]
+    kv_last = jnp.broadcast_to(jnp.asarray(S - 1, jnp.int32), (B, S))
+    if ctx_k is None:
+        return tree_attention(q, k, v, kv_last, scale, block_q, block_k,
+                              window=window, pos_q=pos_q, pos_k=pos_q)
+    A = ctx_k.shape[1]
+    big = jnp.asarray(1 << 30, jnp.int32)
+    ctx_last = jnp.broadcast_to(big, (B, A))
+    if ctx_valid is not None:
+        ctx_last = jnp.where(ctx_valid, big, -1)
+    pos_k = None
+    if window is not None:
+        if ctx_pos is None or pos_q is None:
+            raise ValueError("window needs pos_q and ctx_pos")
+        pos_k = jnp.concatenate([ctx_pos, pos_q], axis=1)
+    return tree_attention(q, jnp.concatenate([ctx_k, k], axis=1),
+                          jnp.concatenate([ctx_v, v], axis=1),
+                          jnp.concatenate([ctx_last, kv_last + A], axis=1),
+                          scale, block_q, block_k, q_off=A,
+                          window=window, pos_q=pos_q, pos_k=pos_k)

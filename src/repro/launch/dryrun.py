@@ -148,7 +148,7 @@ def build_prefill_fn(cfg: ModelConfig, impl: str):
 
 def build_decode_fn(cfg: ModelConfig):
     def step(params, cache, tokens, pos, write_idx):
-        return serve.decode_step(cfg, params, cache, tokens, pos, write_idx)
+        return serve._decode_step(cfg, params, cache, tokens, pos, write_idx)
 
     return step
 
@@ -339,7 +339,7 @@ def run_combo(arch: str, shape_name: str, multi_pod: bool, impl: str,
             B, S = shape.global_batch, shape.seq_len
             enc_len = cfg.encdec.src_len if cfg.encdec else 0
             cspecs = jax.eval_shape(
-                lambda: serve.init_cache(cfg, B, S, enc_len))
+                lambda: serve._init_cache(cfg, B, S, enc_len))
             cshard = cache_shardings(cspecs, mesh, daxes)
             args = (pspecs, cspecs, SDS((B, 1), jnp.int32),
                     SDS((B,), jnp.int32), SDS((), jnp.int32))

@@ -43,10 +43,11 @@ from repro.data.loader import LoaderConfig
 from repro.launch.mesh import data_axes, data_axis_size, make_host_mesh, \
     make_production_mesh
 from repro.models.model import init_params
-from repro.train.checkpoint import save_checkpoint
+from repro.train.checkpoint import (load_checkpoint, load_meta,
+                                    save_checkpoint)
 from repro.train.engine import TreeTrainEngine
 from repro.train.optimizer import OptimizerConfig, init_opt_state
-from repro.train.planner import PlannerConfig, plan_pipeline
+from repro.train.planner import PlannerConfig, plans
 
 
 def main() -> None:
@@ -89,8 +90,16 @@ def main() -> None:
                     choices=["host", "single", "multi"])
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--save", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=None,
+                    help="save params+opt_state to --save every N steps "
+                         "(mid-stream resume point)")
+    ap.add_argument("--resume", default=None,
+                    help="checkpoint dir to resume from (replays the "
+                         "deterministic plan stream up to the saved step)")
     ap.add_argument("--log-every", type=int, default=1)
     args = ap.parse_args()
+    if args.ckpt_every is not None and not args.save:
+        ap.error("--ckpt-every needs --save (the checkpoint directory)")
 
     cfg = get_config(args.arch, smoke=args.smoke)
     if args.kind is None:
@@ -147,12 +156,19 @@ def main() -> None:
     with sh.use_mesh(mesh, data_axes=daxes):
         params = init_params(cfg, jax.random.key(args.seed))
         opt_state = init_opt_state(params)
+        done = 0
+        if args.resume:
+            params, opt_state = load_checkpoint(args.resume, params,
+                                                opt_state)
+            done = int(load_meta(args.resume).get("steps", 0))
+            print(f"[train] resumed {args.resume} @ step {done}")
         engine = TreeTrainEngine(cfg, opt_cfg, impl=args.impl)
+        engine.steps_done = done
 
         pcfg = PlannerConfig(lookahead=args.lookahead,
                              plan_workers=args.plan_workers,
                              num_replicas=ndata, max_rows=args.rows)
-        pipe = plan_pipeline(cfg, lc, args.steps, pcfg)
+        pipe = plans(cfg, lc, args.steps, pcfg)
 
         tokens_done = padded_total = part_trees = part_tokens = 0
         dropped_total = 0
@@ -161,9 +177,14 @@ def main() -> None:
         # THE training loop: every step — packed rows, partition waves,
         # SFT or RL — is one engine.step over its ExecutionPlan; the
         # planner builds the NEXT plan on background threads meanwhile
-        for i, plan in enumerate(pipe):
+        executed = 0
+        for i, ps in enumerate(pipe):
+            plan = ps.execution_plan()
             dropped_total += plan.dropped
             if plan.is_empty:       # nothing trainable this step
+                continue
+            executed += 1
+            if executed <= done:    # resume: replay the plan stream
                 continue
             ts = time.time()
             params, opt_state, m = engine.step(params, opt_state, plan)
@@ -183,6 +204,12 @@ def main() -> None:
                       f"gnorm {m['grad_norm']:8.3f} "
                       f"parts {plan.num_oversized:2d} "
                       f"{dt * 1e3:7.1f}ms", flush=True)
+            if args.ckpt_every and engine.steps_done % args.ckpt_every == 0:
+                save_checkpoint(args.save, params, opt_state,
+                                meta={"arch": cfg.name,
+                                      "steps": engine.steps_done})
+                print(f"[train] ckpt @ step {engine.steps_done} "
+                      f"→ {args.save}", flush=True)
         wall = time.time() - t0
         print(f"[train] {len(history)} steps, {tokens_done} unique tokens, "
               f"{dropped_total} dropped trees, {wall:.1f}s wall "
@@ -200,7 +227,8 @@ def main() -> None:
                   f"{part_tokens} tokens, {dropped_total} dropped")
         if args.save:
             save_checkpoint(args.save, params, opt_state,
-                            meta={"arch": cfg.name, "steps": len(history)})
+                            meta={"arch": cfg.name,
+                                  "steps": engine.steps_done})
             with open(args.save + "/history.json", "w") as f:
                 json.dump(history, f)
             print(f"[train] saved → {args.save}")

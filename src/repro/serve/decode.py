@@ -1,6 +1,13 @@
-"""Serving: prefill + single-token decode with per-layer caches.
+"""Serving internals: per-layer caches + single-token decode.
 
-``decode_32k`` / ``long_500k`` dry-run shapes lower ``decode_step`` — one
+The supported serving surface is ``serve/session.DecodeSession``
+(prefill / fork / step / snapshot); this module holds the cache layout
+(``_init_cache``) and the jit-able one-token step (``_decode_step``) the
+session drives, plus ``rollouts_to_tree``.  The old free functions
+``init_cache`` / ``decode_step`` remain as deprecated wrappers for one
+release.
+
+``decode_32k`` / ``long_500k`` dry-run shapes lower ``_decode_step`` — one
 new token against a KV/SSM cache.  Caches are layer-stacked pytrees so the
 decode layer loop is a lax.scan (same compile-size discipline as training).
 
@@ -18,6 +25,7 @@ Cache kinds:
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any
 
 import jax
@@ -62,8 +70,8 @@ def _ssm_cache(L: int, B: int, cfg: ModelConfig, dt) -> dict:
         lambda a: jnp.broadcast_to(a[None], (L,) + a.shape).copy(), base)
 
 
-def init_cache(cfg: ModelConfig, batch: int, buf_len: int,
-               enc_len: int = 0) -> dict:
+def _init_cache(cfg: ModelConfig, batch: int, buf_len: int,
+                enc_len: int = 0) -> dict:
     """buf_len: KV slots (= max context, or window size for sliding)."""
     dt = _dtype(cfg)
     a = cfg.attn
@@ -206,9 +214,9 @@ def rollouts_to_tree(sequences, rewards, *, prompt_len: int = 0,
     return TrajectoryTree(root=build(list(range(len(seqs))), 0))
 
 
-def decode_step(cfg: ModelConfig, params: dict, cache: dict,
-                tokens: jax.Array, pos: jax.Array, write_idx: jax.Array
-                ) -> tuple[jax.Array, dict]:
+def _decode_step(cfg: ModelConfig, params: dict, cache: dict,
+                 tokens: jax.Array, pos: jax.Array, write_idx: jax.Array
+                 ) -> tuple[jax.Array, dict]:
     """tokens: [B, 1]; pos: [B] absolute positions; write_idx: scalar ring
     slot.  Returns (logits [B, vocab], new_cache)."""
     from repro.models.layers import embed
@@ -280,3 +288,28 @@ def decode_step(cfg: ModelConfig, params: dict, cache: dict,
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = logits_from_hidden(params["embed"], params.get("lm_head"), x)
     return shard_logits(logits)[:, 0], new_cache
+
+
+# ---------------------------------------------------------------------------
+# Deprecated free-function surface (one release) — use DecodeSession
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, buf_len: int,
+               enc_len: int = 0) -> dict:
+    """Deprecated: use ``serve.session.DecodeSession.create`` instead."""
+    warnings.warn(
+        "serve.decode.init_cache is deprecated and will be removed next "
+        "release; use serve.session.DecodeSession.create(cfg, params, "
+        "batch=..., buf_len=...)", DeprecationWarning, stacklevel=2)
+    return _init_cache(cfg, batch, buf_len, enc_len)
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict,
+                tokens: jax.Array, pos: jax.Array, write_idx: jax.Array
+                ) -> tuple[jax.Array, dict]:
+    """Deprecated: use ``serve.session.DecodeSession.step`` instead."""
+    warnings.warn(
+        "serve.decode.decode_step is deprecated and will be removed next "
+        "release; use serve.session.DecodeSession.step(tokens)",
+        DeprecationWarning, stacklevel=2)
+    return _decode_step(cfg, params, cache, tokens, pos, write_idx)

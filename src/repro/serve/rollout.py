@@ -1,0 +1,156 @@
+"""K-branch rollout groups over one shared-prefix DecodeSession.
+
+``rollout_group`` is the generation half of the RL loop (paper §2's
+model-update phase): prefill the common prompt ONCE through the tree
+kernels' parallel path, ``fork`` K branch tails off the cached prefix,
+decode the branches in lockstep, score them, and merge the group back
+into a single advantage-weighted :class:`TrajectoryTree` via
+``rollouts_to_tree`` — the exact tree shape the training engine ingests.
+
+The session's token accounting is returned per group: ``prefill_tokens``
+must equal the prompt length (not K× it) — the proof, asserted by the
+``rl_service`` benchmark, that the shared prefix is computed exactly
+once per group no matter how many branches reuse it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import lru_cache
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.tree import TrajectoryTree
+from repro.serve.decode import rollouts_to_tree
+from repro.serve.session import DecodeSession
+
+
+@dataclass(frozen=True)
+class RolloutConfig:
+    """Shape of one rollout group."""
+    k: int = 4                        # branches per prompt
+    prompt_len: int = 12
+    max_new: int = 16                 # decode steps per branch
+    temperature: float = 1.0          # 0 → greedy (all branches collapse)
+    eos_token: Optional[int] = None   # truncate a branch after this token
+    impl: str = "ref"                 # attention impl for the prefill pass
+
+    @property
+    def buf_len(self) -> int:
+        return self.prompt_len + self.max_new
+
+
+@dataclass
+class GroupStats:
+    """Per-group compute accounting (from the shared SessionStats)."""
+    k: int
+    prompt_len: int
+    prefill_tokens: int      # prefix positions actually computed
+    decode_tokens: int       # branch steps × branches
+    rewards: list
+
+    @property
+    def saved_prefill_tokens(self) -> int:
+        """Prefix tokens NOT recomputed thanks to the shared-KV fork."""
+        return self.k * self.prompt_len - self.prefill_tokens
+
+
+def sample_tokens(logits: jax.Array, vocab_size: int, key,
+                  temperature: float) -> jax.Array:
+    """Sample one token per row from [B, padded_vocab] logits; the
+    padding columns (≥ vocab_size) are masked out before sampling."""
+    logits = jnp.where(jnp.arange(logits.shape[-1]) < vocab_size,
+                       logits, -jnp.inf)
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature,
+                                  axis=-1).astype(jnp.int32)
+
+
+@lru_cache(maxsize=32)
+def _decode_scan(cfg: ModelConfig, steps: int, temperature: float):
+    """One jitted sample-decode loop: ``steps`` lockstep branch tokens per
+    dispatch instead of one dispatch per token — the rollout loop is
+    latency-bound by host dispatch on small models, not FLOPs."""
+    from repro.serve.decode import _decode_step
+
+    def run(params, cache, t0, tok0, key):
+        ring = cache["g0"]["pos"].shape[2] if "g0" in cache else 1
+        K = tok0.shape[0]
+
+        def body(carry, i):
+            cache, tok, key = carry
+            pos = jnp.full((K,), t0 + i, jnp.int32)
+            logits, cache = _decode_step(cfg, params, cache, tok[:, None],
+                                         pos, (t0 + i) % ring)
+            key, sub = jax.random.split(key)
+            nxt = sample_tokens(logits, cfg.vocab_size, sub, temperature)
+            return (cache, nxt, key), tok
+
+        (cache, tok, _), toks = jax.lax.scan(
+            body, (cache, tok0, key), jnp.arange(steps - 1, dtype=jnp.int32))
+        # toks[i] is the token FED at step i (= generated token i); the
+        # final carry holds generated token steps−1
+        return jnp.concatenate([toks, tok[None]], axis=0), cache
+
+    return jax.jit(run)
+
+
+def default_reward(seq: np.ndarray, prompt_len: int) -> float:
+    """Deterministic toy reward: mean residue of the completion tokens.
+    Content-dependent, so a sampled group gets reward variance, while
+    identical rollouts get identical rewards (zero advantage)."""
+    comp = np.asarray(seq)[prompt_len:]
+    if comp.size == 0:
+        return 0.0
+    return float(np.mean(comp % 7)) / 6.0
+
+
+def rollout_group(cfg: ModelConfig, params: dict, prompt, rc: RolloutConfig,
+                  key, reward_fn: Callable[[np.ndarray, int], float]
+                  = default_reward) -> tuple[TrajectoryTree, GroupStats]:
+    """Decode ``rc.k`` branch rollouts of ``prompt`` and merge them into
+    one advantage tree.
+
+    ``prompt``: 1-D int tokens (length rc.prompt_len); ``key``: jax PRNG
+    key.  Returns ``(tree, stats)`` — train the tree with
+    ``loss_mode="rl"``."""
+    prompt = np.asarray(prompt, np.int32).reshape(-1)
+    P, K = len(prompt), rc.k
+    session = DecodeSession.create(cfg, params, buf_len=rc.buf_len)
+    logits = session.prefill(prompt, impl=rc.impl)      # prefix: ONCE
+    branches = session.fork(K)                          # KV reuse, no FLOPs
+
+    # first branch token: K independent samples from the one prefill row
+    key, sub = jax.random.split(key)
+    tok = sample_tokens(jnp.broadcast_to(logits, (K, logits.shape[-1])),
+                        cfg.vocab_size, sub, rc.temperature)
+    # the decode loop runs as ONE fused scan dispatch per group; the
+    # session's cursor/cache/stats are advanced to match
+    toks, cache = _decode_scan(cfg, rc.max_new, rc.temperature)(
+        params, branches.cache, jnp.asarray(branches.t, jnp.int32),
+        tok, key)
+    branches.cache = cache
+    branches.t += rc.max_new - 1
+    branches.stats.decode_tokens += K * (rc.max_new - 1)
+    gen = np.asarray(toks).T                            # [K, max_new]
+
+    seqs, rewards = [], []
+    for kk in range(K):
+        comp = gen[kk]
+        if rc.eos_token is not None:
+            hits = np.nonzero(comp == rc.eos_token)[0]
+            if hits.size:
+                comp = comp[:hits[0] + 1]               # keep the eos
+        seq = np.concatenate([prompt, comp])
+        seqs.append(seq)
+        rewards.append(reward_fn(seq, P))
+    tree = rollouts_to_tree(seqs, rewards, prompt_len=P)
+    stats = GroupStats(k=K, prompt_len=P,
+                       prefill_tokens=session.stats.prefill_tokens,
+                       decode_tokens=session.stats.decode_tokens,
+                       rewards=rewards)
+    return tree, stats

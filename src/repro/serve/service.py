@@ -1,0 +1,198 @@
+"""Async tree-RL service: rollout → advantage tree → planner queue.
+
+Closes the loop the training side already speaks (ROADMAP item 1): a
+background generation thread decodes rollout groups with shared-prefix
+KV reuse (:mod:`serve/rollout`), tags each merged tree with the weight
+version that generated it, and feeds a bounded queue that the planner
+consumes as a live tree source — so plan-build AND generation overlap
+training, AREAL-style, with *bounded* staleness:
+
+  trainer ──publish(params, v)──▶ WeightStore ──wait_for(s − A)──▶ gen
+     ▲                                                             │
+     └── PlanPipeline ◀── tree_batches() ◀── Queue(maxsize=A) ◀────┘
+
+Two mechanisms bound the off-policy lag to ``max_ahead_steps`` (= A):
+
+* the generator *gates*: before producing step ``s``'s trees it blocks
+  until the trainer has published version ≥ ``s − A`` — generation runs
+  at most A optimizer steps ahead of the weights it samples from;
+* the queue *backpressures*: ``put`` blocks once A step-batches are
+  waiting, so a stalled trainer also stalls generation instead of
+  accumulating arbitrarily stale rollouts.
+
+``WeightStore.publish`` deep-copies params onto fresh device buffers —
+the training step donates its argument buffers, so the service must
+never hold references into the optimizer's donated memory.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+import time
+from dataclasses import dataclass, field
+from queue import Queue
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import sharding as sh
+from repro.configs.base import ModelConfig
+from repro.core.tree import TrajectoryTree
+from repro.serve.rollout import GroupStats, RolloutConfig, rollout_group
+
+
+class WeightStore:
+    """Versioned, thread-safe parameter snapshot shared trainer→service.
+
+    ``version`` counts completed optimizer steps; the initial params are
+    version 0.  All reads/writes hold one condition variable, so
+    ``wait_for`` wakes exactly when the trainer publishes."""
+
+    def __init__(self, params: dict, version: int = 0):
+        self._cond = threading.Condition()
+        self._params = jax.tree.map(jnp.copy, params)
+        self._version = version
+
+    @property
+    def version(self) -> int:
+        with self._cond:
+            return self._version
+
+    def get(self) -> tuple[dict, int]:
+        with self._cond:
+            return self._params, self._version
+
+    def publish(self, params: dict, version: int) -> None:
+        """Install new weights.  Copies every leaf: the caller's buffers
+        may be donated to the next update step."""
+        fresh = jax.tree.map(jnp.copy, params)
+        with self._cond:
+            self._params = fresh
+            self._version = version
+            self._cond.notify_all()
+
+    def wait_for(self, version: int, timeout: Optional[float] = None
+                 ) -> bool:
+        with self._cond:
+            return self._cond.wait_for(
+                lambda: self._version >= version, timeout)
+
+
+@dataclass(frozen=True)
+class ServiceConfig:
+    """Knobs of the async loop."""
+    groups_per_step: int = 2          # rollout groups per optimizer step
+    max_ahead_steps: int = 1          # A: generation lead ≤ A steps
+    rollout: RolloutConfig = field(default_factory=RolloutConfig)
+    seed: int = 0
+    gate_timeout_s: float = 120.0     # deadlock guard on wait_for
+
+
+@dataclass
+class ServiceStats:
+    gen_busy_s: float = 0.0           # wall time generating
+    exposed_wait_s: float = 0.0       # consumer time blocked on the queue
+    steps_generated: int = 0
+    trees_generated: int = 0
+    prefill_tokens: int = 0
+    decode_tokens: int = 0
+    saved_prefill_tokens: int = 0     # (k−1)·P per group: KV-reuse savings
+    min_version: Optional[int] = None
+    max_gen_lag: int = 0              # max (step − weight_version) at gen
+
+
+class AsyncTreeRLService:
+    """Generates ``num_steps`` step-batches of advantage trees on a daemon
+    thread, bounded-staleness gated against a :class:`WeightStore`.
+
+    Consume with :meth:`tree_batches` — an iterator of
+    ``list[TrajectoryTree]`` (the planner's native source element), each
+    tree carrying ``weight_version``.  Exceptions in the generator are
+    re-raised to the consumer."""
+
+    def __init__(self, cfg: ModelConfig, store: WeightStore,
+                 sc: ServiceConfig, num_steps: int):
+        self.cfg, self.store, self.sc = cfg, store, sc
+        self.num_steps = num_steps
+        self.stats = ServiceStats()
+        self._queue: Queue = Queue(maxsize=max(1, sc.max_ahead_steps))
+        self._error: Optional[BaseException] = None
+        # jax's mesh context is thread-local: capture the constructing
+        # thread's mesh so generation traces hit the same jit cache
+        self._mesh = sh.current_mesh()
+        self._thread = threading.Thread(
+            target=self._run, name="tree-rl-gen", daemon=True)
+
+    # -- producer ----------------------------------------------------------
+    def start(self) -> "AsyncTreeRLService":
+        self._thread.start()
+        return self
+
+    def _run(self) -> None:
+        try:
+            with self._mesh or contextlib.nullcontext():
+                self._generate()
+        except BaseException as e:          # noqa: BLE001 — relayed
+            self._error = e
+            self._queue.put(None)
+
+    def _generate(self) -> None:
+        sc, rc = self.sc, self.sc.rollout
+        rng = np.random.default_rng(sc.seed)
+        key = jax.random.key(sc.seed)
+        for s in range(self.num_steps):
+            # staleness gate: weights can lag at most A steps behind
+            if not self.store.wait_for(s - sc.max_ahead_steps,
+                                       timeout=sc.gate_timeout_s):
+                raise TimeoutError(
+                    f"weight store stuck below version "
+                    f"{s - sc.max_ahead_steps} for "
+                    f"{sc.gate_timeout_s}s (generation step {s})")
+            params, ver = self.store.get()
+            t0 = time.perf_counter()
+            trees: list[TrajectoryTree] = []
+            for _ in range(sc.groups_per_step):
+                prompt = rng.integers(0, self.cfg.vocab_size,
+                                      rc.prompt_len)
+                key, sub = jax.random.split(key)
+                tree, gs = rollout_group(self.cfg, params, prompt,
+                                         rc, sub)
+                tree.weight_version = ver
+                trees.append(tree)
+                self._absorb(gs)
+            st = self.stats
+            st.gen_busy_s += time.perf_counter() - t0
+            st.steps_generated += 1
+            st.trees_generated += len(trees)
+            st.min_version = (ver if st.min_version is None
+                              else min(st.min_version, ver))
+            st.max_gen_lag = max(st.max_gen_lag, s - ver)
+            self._queue.put(trees)     # backpressure: ≤ A waiting
+        self._queue.put(None)
+
+    def _absorb(self, gs: GroupStats) -> None:
+        st = self.stats
+        st.prefill_tokens += gs.prefill_tokens
+        st.decode_tokens += gs.decode_tokens
+        st.saved_prefill_tokens += gs.saved_prefill_tokens
+
+    # -- consumer ----------------------------------------------------------
+    def tree_batches(self) -> Iterator[list[TrajectoryTree]]:
+        """Live planner source: one list of trees per optimizer step.
+        Time spent blocked here is generation *exposed* to training
+        (recorded in ``stats.exposed_wait_s``)."""
+        while True:
+            t0 = time.perf_counter()
+            item = self._queue.get()
+            self.stats.exposed_wait_s += time.perf_counter() - t0
+            if item is None:
+                if self._error is not None:
+                    raise RuntimeError(
+                        "rollout generation failed") from self._error
+                return
+            yield item
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        self._thread.join(timeout)

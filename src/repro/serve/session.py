@@ -1,0 +1,242 @@
+"""DecodeSession — the serving API: prefill / fork / step / snapshot.
+
+One session owns a decode cache for ``batch`` synchronized branches:
+
+  ``create``    allocate the cache (``serve/decode._init_cache`` layout).
+  ``prefill``   run a token prefix through the model and populate the
+                cache.  Dense/MoE full-history sessions take the
+                *parallel* path: one tree-training forward over the whole
+                prefix (a chain is a 1-path tree) with per-layer K/V
+                captured post-rope straight into the cache — and on a
+                session that already holds context (a fork, or a second
+                prefill) the cached slots ride in as gateway ancestors,
+                i.e. the fused tree-attention kernel's forked-prefix
+                ``q_off`` shape (see ``kernels/ops.prefill_attention``).
+                Other families (SSM state, sliding windows, enc-dec) fall
+                back to the step-wise loop — still one computation of the
+                prefix per session, shared by every later ``fork``.
+  ``fork``      split a 1-branch session into K branches that *share* the
+                prefilled prefix: the cache rows are tiled, the prefix is
+                NOT recomputed (this is the shared-prefix KV reuse the
+                tree kernels train against — paper §2).
+  ``step``      one decode token per branch (jitted, cached per config).
+  ``snapshot``  O(1) fork-point capture: caches are immutable jax arrays,
+                so a snapshot is an independent session sharing buffers.
+
+Token accounting (``SessionStats``, shared across forks/snapshots of a
+group) records prefill vs decode tokens — the benchmark's proof that each
+common prefix is computed exactly once per rollout group.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from functools import lru_cache
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import logits_from_hidden
+from repro.models.transformer import layer_groups, partition_forward
+from repro.serve.decode import _decode_step, _init_cache
+from repro.sharding import shard_logits
+
+
+@lru_cache(maxsize=32)
+def _step_exec(cfg: ModelConfig):
+    return jax.jit(lambda p, c, t, pos, w: _decode_step(cfg, p, c, t,
+                                                        pos, w))
+
+
+@lru_cache(maxsize=32)
+def _prefill_exec(cfg: ModelConfig, impl: str):
+    """Parallel prefill: one partition-mode forward over the prefix chain
+    with every position captured.  ``gw`` carries the session's existing
+    cache slots as gateway ancestors (the kernel's q_off path); ``idx``
+    is the capture index array (arange over the new positions)."""
+    def f(params, batch, gw, idx):
+        capspecs = {"pf": {"path_idx": idx}}
+        hidden, _, caps = partition_forward(cfg, params, batch, gw,
+                                            capspecs, impl)
+        logits = logits_from_hidden(params["embed"], params.get("lm_head"),
+                                    hidden[:, -1:])
+        return shard_logits(logits)[:, 0], caps
+
+    return jax.jit(f)
+
+
+@dataclass
+class SessionStats:
+    """Token accounting, shared by every fork/snapshot of one group."""
+    prefill_tokens: int = 0   # prefix tokens computed (once per session)
+    decode_tokens: int = 0    # single-token steps × branches
+
+
+@dataclass
+class DecodeSession:
+    """A decode cache + position cursor for ``batch`` lockstep branches."""
+    cfg: ModelConfig
+    params: dict
+    cache: dict
+    batch: int
+    t: int = 0                        # next absolute position
+    enc_len: int = 0
+    stats: SessionStats = field(default_factory=SessionStats)
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def create(cls, cfg: ModelConfig, params: dict, *, batch: int = 1,
+               buf_len: int, enc_len: int = 0) -> "DecodeSession":
+        return cls(cfg=cfg, params=params,
+                   cache=_init_cache(cfg, batch, buf_len, enc_len),
+                   batch=batch, enc_len=enc_len)
+
+    @property
+    def _ring(self) -> Optional[int]:
+        """KV ring-buffer length (None for pure-SSM caches)."""
+        for name in ("g0", "g1", "shared"):
+            grp = self.cache.get(name)
+            if isinstance(grp, dict) and "pos" in grp:
+                return grp["pos"].shape[2]
+        for name, grp in self.cache.items():
+            if name != "cross" and isinstance(grp, dict) and "pos" in grp:
+                return grp["pos"].shape[2]
+        return None
+
+    def load_cross(self, k: jax.Array, v: jax.Array,
+                   valid: Optional[jax.Array] = None) -> None:
+        """Install encoder cross K/V (audio enc-dec sessions)."""
+        cross = dict(self.cache["cross"])
+        cross["k"] = k.astype(cross["k"].dtype)
+        cross["v"] = v.astype(cross["v"].dtype)
+        if valid is not None:
+            cross["valid"] = valid
+        self.cache = {**self.cache, "cross": cross}
+
+    # -- prefill -----------------------------------------------------------
+    def _can_parallel_prefill(self, P: int) -> bool:
+        cfg = self.cfg
+        if cfg.family not in ("dense", "moe"):
+            return False
+        if cfg.attn is None or cfg.attn.window is not None:
+            return False
+        if cfg.frontend is not None:
+            return False
+        ring = self._ring
+        return ring is not None and self.t + P <= ring
+
+    def prefill(self, tokens, impl: str = "ref") -> jax.Array:
+        """Run a prefix through the model, populate the cache, and return
+        the last position's logits [batch, padded_vocab].
+
+        ``tokens``: 1-D [P] (same prefix for every branch).  May be called
+        again on a session that already holds context (e.g. after fork):
+        the new tokens extend the chain, attending to the cached slots."""
+        toks = np.asarray(tokens, np.int32).reshape(-1)
+        P = toks.shape[0]
+        assert P > 0, "empty prefill"
+        if self._can_parallel_prefill(P):
+            logits = self._prefill_parallel(toks, impl)
+        else:
+            logits = self._prefill_steps(toks)
+        self.stats.prefill_tokens += self.batch * P
+        return logits
+
+    def _prefill_parallel(self, toks: np.ndarray, impl: str) -> jax.Array:
+        cfg, B, P, t0 = self.cfg, self.batch, len(toks), self.t
+        batch = dict(
+            tokens=jnp.broadcast_to(jnp.asarray(toks)[None], (B, P)),
+            pos_ids=jnp.broadcast_to(
+                t0 + jnp.arange(P, dtype=jnp.int32)[None], (B, P)),
+            kv_last=jnp.full((B, P), P - 1, jnp.int32),
+            prev_idx=jnp.broadcast_to(
+                jnp.arange(P, dtype=jnp.int32)[None] - 1, (B, P)),
+            valid=jnp.ones((B, P), bool))
+        groups = layer_groups(cfg)
+        gw = None
+        if t0 > 0:
+            # cached slots ride in as gateway ancestors → the fused
+            # kernel's forked-prefix q_off shape (prefix computed once,
+            # regardless of how many branches extend it)
+            gw = {f"g{gi}": {"attn": {"k": self.cache[f"g{gi}"]["k"]
+                                      [:, :, :t0],
+                                      "v": self.cache[f"g{gi}"]["v"]
+                                      [:, :, :t0]}}
+                  for gi in range(len(groups))}
+            anc_pos = self.cache["g0"]["pos"][0][:, :t0]
+            batch["anc_pos"] = anc_pos
+            batch["anc_valid"] = anc_pos >= 0
+        logits, caps = _prefill_exec(cfg, impl)(
+            self.params, batch, gw, np.arange(P))
+        new_cache = dict(self.cache)
+        for gi in range(len(groups)):
+            grp = dict(new_cache[f"g{gi}"])
+            cap = caps[f"g{gi}"]["attn"]["pf"]      # [L, B, P, Kh, hd]
+            grp["k"] = grp["k"].at[:, :, t0:t0 + P].set(
+                cap["k"].astype(grp["k"].dtype))
+            grp["v"] = grp["v"].at[:, :, t0:t0 + P].set(
+                cap["v"].astype(grp["v"].dtype))
+            grp["pos"] = grp["pos"].at[:, :, t0:t0 + P].set(
+                t0 + jnp.arange(P, dtype=jnp.int32))
+            new_cache[f"g{gi}"] = grp
+        self.cache = new_cache
+        self.t = t0 + P
+        return logits
+
+    def _prefill_steps(self, toks: np.ndarray) -> jax.Array:
+        logits = None
+        for tok in toks:
+            logits = self._advance(
+                jnp.full((self.batch,), int(tok), jnp.int32))
+        return logits
+
+    # -- branching ---------------------------------------------------------
+    def fork(self, k: int) -> "DecodeSession":
+        """Split into ``k`` branches sharing this session's cache content.
+
+        The prefilled prefix is NOT recomputed — its KV rows are tiled
+        (identical rows; a production server would alias one copy).  Only
+        1-branch sessions fork; the forks share this session's stats."""
+        assert self.batch == 1, "fork() requires a 1-branch session"
+
+        def tile(a, axis):
+            return jnp.repeat(a, k, axis=axis)
+
+        new_cache = {}
+        for name, grp in self.cache.items():
+            if name == "cross":
+                # cross "valid" is [B, enc] (batch axis 0); k/v are
+                # [L, B, enc, ...] like every other leaf
+                new_cache[name] = {kk: tile(vv, 0 if kk == "valid" else 1)
+                                   for kk, vv in grp.items()}
+            else:
+                new_cache[name] = jax.tree.map(lambda a: tile(a, 1), grp)
+        return replace(self, cache=new_cache, batch=k)
+
+    def snapshot(self) -> "DecodeSession":
+        """O(1) capture of the current state: an independent session that
+        can be stepped separately (caches are immutable device arrays).
+        Shares the group's stats — compute on abandoned branches still
+        counts."""
+        return replace(self)
+
+    # -- decode ------------------------------------------------------------
+    def _advance(self, tokens: jax.Array) -> jax.Array:
+        ring = self._ring
+        widx = jnp.asarray(self.t % ring if ring else 0, jnp.int32)
+        pos = jnp.full((self.batch,), self.t, jnp.int32)
+        logits, self.cache = _step_exec(self.cfg)(
+            self.params, self.cache, tokens.reshape(self.batch, 1),
+            pos, widx)
+        self.t += 1
+        return logits
+
+    def step(self, tokens) -> jax.Array:
+        """Decode one token per branch.  ``tokens``: [batch] (or [batch,1])
+        int32.  Returns logits [batch, padded_vocab]."""
+        tokens = jnp.asarray(tokens, jnp.int32)
+        logits = self._advance(tokens)
+        self.stats.decode_tokens += self.batch
+        return logits

@@ -48,6 +48,13 @@ def use_mesh(mesh: Mesh, data_axes=("data",), model_axis="model",
          _CTX.seq_parallel) = old
 
 
+def current_mesh() -> Optional[Mesh]:
+    """The active mesh, if any.  jax's ``with mesh:`` context is
+    thread-local — a worker thread that dispatches jitted computations
+    must re-enter it or it will trace (and compile) against no mesh."""
+    return _CTX.mesh
+
+
 def _ns(spec: P) -> Optional[NamedSharding]:
     if _CTX.mesh is None:
         return None

@@ -36,6 +36,13 @@ def save_checkpoint(path: str, params: Any, opt_state: Any = None,
                    "keys": sorted(_flatten(params))}, f, indent=1)
 
 
+def load_meta(path: str) -> dict:
+    """The manifest's ``meta`` dict (e.g. ``steps`` for mid-stream
+    resume)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f).get("meta", {})
+
+
 def load_checkpoint(path: str, params_like: Any,
                     opt_state_like: Any = None):
     """Restore into the structure of ``params_like`` (shape/dtype checked)."""

@@ -72,6 +72,9 @@ class ExecutionPlan:
     partition: Optional[PartitionPlan] = None
     num_trees: int = 0           # packed + oversized (loss normalizer)
     dropped: int = 0             # trees lost this step (no auto-partition)
+    versions: Optional[tuple] = None   # (min, max) weight_version of the
+    #                              step's trees (async RL staleness; None
+    #                              for offline/synthetic sources)
 
     @property
     def is_empty(self) -> bool:
@@ -288,13 +291,19 @@ class TreeTrainEngine:
 
     def __init__(self, cfg: ModelConfig,
                  opt_cfg: Optional[OptimizerConfig] = None, *,
-                 impl: str = "ref", donate: bool = True):
+                 impl: str = "ref", donate: bool = True,
+                 weight_store=None):
         self.cfg = cfg
         self.opt_cfg = opt_cfg
         self.impl = impl
         self.donate = donate
         self.host_syncs = 0
         self.steps_done = 0
+        # async RL: publish updated weights (copied — ours get donated)
+        # after every optimizer step, and audit the off-policy lag of
+        # each consumed plan (trainer step − oldest tree's version)
+        self.weight_store = weight_store
+        self.max_lag_seen = 0
 
     # -- gradient accumulation (no optimizer, no host sync) ---------------
     def accumulate(self, params, plan: ExecutionPlan):
@@ -345,7 +354,13 @@ class TreeTrainEngine:
         metrics = dict(zip(self.METRIC_NAMES, host.tolist()))
         metrics["nll"] = metrics["nll_sum"] / max(metrics["weight_sum"],
                                                   1e-9)
+        if plan.versions is not None:
+            lag = self.steps_done - plan.versions[0]
+            metrics["max_lag"] = lag
+            self.max_lag_seen = max(self.max_lag_seen, lag)
         self.steps_done += 1
+        if self.weight_store is not None:
+            self.weight_store.publish(params, self.steps_done)
         return params, opt_state, metrics
 
     def _sync(self, vec: jax.Array) -> np.ndarray:

@@ -33,7 +33,9 @@ Invariants (property-tested in tests/test_planner.py):
   - per-replica row-load imbalance ≤ 1 non-empty row.
 
 ``data/loader.py`` shrank to tree ingestion; its ``step_batches`` /
-``execution_plans`` are thin wrappers over this module.
+``execution_plans`` wrappers are deprecated in favour of :func:`plans`,
+which also accepts a *live* source (the async rollout service) in place
+of a batch count.
 """
 from __future__ import annotations
 
@@ -360,9 +362,19 @@ class PlannedStep:
                 row_multiple=pc.num_replicas,
                 forest=[o.forest(cap, chunk, lc.loss_mode)
                         for o in self.oversized])
+        vers = [v for v in
+                (getattr(f.tree, "weight_version", None)
+                 for f in self.fits)
+                if v is not None]
+        vers += [v for v in
+                 (getattr(o.tree, "weight_version", None)
+                  for o in self.oversized)
+                 if v is not None]
         self._plan = ExecutionPlan(packed=packed, partition=partition,
                                    num_trees=self.num_trees,
-                                   dropped=self.dropped)
+                                   dropped=self.dropped,
+                                   versions=((min(vers), max(vers))
+                                             if vers else None))
         return self._plan
 
 
@@ -449,19 +461,33 @@ def plan_window(cfg: ModelConfig, lc: LoaderConfig, pc: PlannerConfig,
     return steps
 
 
-def plan_stream(cfg: ModelConfig, lc: LoaderConfig, num_batches: int,
+def plan_stream(cfg: ModelConfig, lc: LoaderConfig,
+                source: "int | Iterable[Sequence[TrajectoryTree]]",
                 pc: Optional[PlannerConfig] = None
                 ) -> Iterator[PlannedStep]:
-    """The scheduler's main stream: ingest trees (data/loader), plan each
-    lookahead window globally, yield non-empty PlannedSteps in step
-    order.  All decisions are deterministic in (cfg, lc, pc, seed)."""
+    """The scheduler's main stream: ingest trees, plan each lookahead
+    window globally, yield non-empty PlannedSteps in step order.
+
+    ``source`` is either an int — that many synthetic generator batches
+    (deterministic in (cfg, lc, seed), the offline path) — or any
+    iterable of tree lists, one list per optimizer step: a live rollout
+    queue (``serve/service.AsyncTreeRLService.tree_batches``), a dataset
+    reader, etc.  A live source is pulled at most ``lookahead`` steps
+    ahead of the consumed plan, so the planner adds no extra staleness
+    beyond its window."""
     pc = pc or PlannerConfig()
     cache = CompileCacheSim()
     W = max(1, pc.lookahead)
-    gen = tree_stream(cfg, lc, num_batches)
+    if isinstance(source, int):
+        gen: Iterator = tree_stream(cfg, lc, source)
+        remaining: Optional[int] = source
+    else:
+        gen = iter(source)
+        remaining = None
     first = 0
-    while first < num_batches:
-        window = list(islice(gen, min(W, num_batches - first)))
+    while remaining is None or first < remaining:
+        n = W if remaining is None else min(W, remaining - first)
+        window = [list(trees) for trees in islice(gen, n)]
         if not window:
             break
         for ps in plan_window(cfg, lc, pc, window, cache=cache,
@@ -608,6 +634,35 @@ class PlanPipeline:
                 yield val
         finally:
             self.close()
+
+
+def plans(cfg: ModelConfig, lc: LoaderConfig,
+          source: "int | Iterable[Sequence[TrajectoryTree]]",
+          pc: Optional[PlannerConfig] = None, *,
+          max_rows: Optional[int] = None) -> PlanPipeline:
+    """THE planner entrypoint: a :class:`PlanPipeline` of
+    :class:`PlannedStep`\\ s, scheduled over ``source`` and built on
+    background threads.
+
+    ``source``: an int (that many deterministic synthetic batches — the
+    offline path) or any iterable of per-step tree lists (a live rollout
+    queue, a dataset reader).  Each yielded step arrives with its
+    materialization pre-built: call ``step.execution_plan()`` to train it
+    (``TreeTrainEngine.step``) or ``step.step_batch()`` for the raw
+    packed rows — both are cached, already-paid lookups.
+
+    Supersedes the deprecated ``data/loader.step_batches`` and
+    ``data/loader.execution_plans`` wrappers (one-release warning)."""
+    pc = pc or PlannerConfig()
+    if max_rows is not None and pc.max_rows is None:
+        pc = replace(pc, max_rows=max_rows)
+
+    def build(ps: PlannedStep) -> PlannedStep:
+        ps.execution_plan()           # materialize on the worker thread
+        return ps
+
+    return PlanPipeline(plan_stream(cfg, lc, source, pc), build,
+                        workers=pc.plan_workers, depth=pc.pipeline_depth)
 
 
 def plan_pipeline(cfg: ModelConfig, lc: LoaderConfig, num_batches: int,

@@ -62,19 +62,17 @@ def test_arch_smoke_decode(arch):
     cfg = get_config(arch, smoke=True)
     if cfg.family == "audio":
         pytest.skip("audio decode smoke covered in test_serve.py")
-    from repro.serve.decode import decode_step, init_cache
+    from repro.serve.session import DecodeSession
     params = init_params(cfg, jax.random.key(0))
     B, T = 2, 8
-    cache = init_cache(cfg, B, T)
+    sess = DecodeSession.create(cfg, params, batch=B, buf_len=T)
     rng = np.random.default_rng(0)
     for t in range(3):
-        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, 1)),
-                           jnp.int32)
-        logits, cache = decode_step(cfg, params, cache, toks,
-                                    jnp.full((B,), t, jnp.int32),
-                                    jnp.asarray(t, jnp.int32))
+        toks = rng.integers(0, cfg.vocab_size, B).astype(np.int32)
+        logits = sess.step(toks)
         assert logits.shape == (B, cfg.padded_vocab)
         assert np.isfinite(np.asarray(logits)).all()
+    assert sess.t == 3 and sess.stats.decode_tokens == 3 * B
 
 
 def test_all_full_configs_construct():

@@ -9,10 +9,11 @@ import pytest
 
 from conftest import tiny_cfg
 from repro.core.gateway import packed_partitioned_value_and_grad
-from repro.data.loader import LoaderConfig, execution_plans, step_batches
+from repro.data.loader import LoaderConfig
 from repro.models.model import init_params
 from repro.train.engine import TreeTrainEngine
 from repro.train.optimizer import OptimizerConfig, init_opt_state
+from repro.train.planner import plans
 from repro.train.train_step import jitted_update, make_grad_fn
 
 
@@ -26,18 +27,16 @@ def _lc(**kw):
 
 def _find_mixed(cfg, lc, steps=8, min_oversized=2):
     """First step whose batch holds BOTH packed rows and ≥2 oversized
-    trees, as (step index, StepBatch, ExecutionPlan) — the loader streams
-    are deterministic per seed, so both views see the same data."""
-    idx = None
-    for i, sb in enumerate(step_batches(cfg, lc, steps)):
+    trees, as (StepBatch, ExecutionPlan) — one PlannedStep materializes
+    both views from the same schedule."""
+    for ps in plans(cfg, lc, steps):
+        sb = ps.step_batch()
         if sb.inputs is not None and len(sb.oversized) >= min_oversized:
-            idx, ref_sb = i, sb
-            break
-    assert idx is not None, "no mixed step in this stream; adjust seeds"
-    plans = list(execution_plans(cfg, lc, steps))
-    plan = plans[idx]
-    assert plan.packed is not None and plan.num_oversized >= min_oversized
-    return ref_sb, plan
+            plan = ps.execution_plan()
+            assert plan.packed is not None
+            assert plan.num_oversized >= min_oversized
+            return sb, plan
+    raise AssertionError("no mixed step in this stream; adjust seeds")
 
 
 def _two_branch_reference(cfg, params, sb, lc, impl):
@@ -135,7 +134,8 @@ def test_engine_one_host_sync_per_step():
                                                   total_steps=4),
                              donate=False)
     steps = 0
-    for plan in execution_plans(cfg, lc, 4):
+    for ps in plans(cfg, lc, 4):
+        plan = ps.execution_plan()
         if plan.is_empty:
             continue
         params, opt, m = engine.step(params, opt, plan)
@@ -161,7 +161,8 @@ def test_engine_rl_training_descends_on_grpo_trees():
                              donate=False)
     p0 = jax.tree.leaves(params)[0].copy()
     ran = 0
-    for plan in execution_plans(cfg, lc, 4):
+    for ps in plans(cfg, lc, 4):
+        plan = ps.execution_plan()
         if plan.is_empty:
             continue
         params, opt, m = engine.step(params, opt, plan)

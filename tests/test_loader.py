@@ -10,8 +10,14 @@ from repro.core.packing import (DoesNotFitError, pack_partition_waves,
 from repro.core.partition import (partition_tree,
                                   standard_partition_token_counts)
 from repro.core.tree import TrajectoryTree, TreeNode, serialize_tree
-from repro.data.loader import LoaderConfig, step_batches
+from repro.data.loader import LoaderConfig
 from repro.data.synthetic import random_tree, trees_for_batch
+from repro.train.planner import plans
+
+
+def _step_batches(cfg, lc, steps):
+    """The planner's stream, viewed as raw per-step data."""
+    return (ps.step_batch() for ps in plans(cfg, lc, steps))
 
 
 def _chain_tree(seg_lens, vocab=50):
@@ -129,7 +135,7 @@ def test_auto_partition_drops_nothing():
     steps = 6
     gen_tokens = kept_tokens = 0
     n_oversized = n_packed = 0
-    for b, sb in enumerate(step_batches(cfg, lc, steps)):
+    for b, sb in enumerate(_step_batches(cfg, lc, steps)):
         assert sb.dropped == 0
         n_oversized += len(sb.oversized)
         if sb.tb is not None:
@@ -151,7 +157,7 @@ def test_default_mode_counts_drops():
     lc = LoaderConfig(seq_len=96, batch_rows=2, trees_per_batch=4,
                       mode="tree", kind="agentic", seed=5,
                       gen_kwargs=dict(turn_len_range=(8, 40), num_turns=4))
-    dropped = sum(sb.dropped for sb in step_batches(cfg, lc, 6))
+    dropped = sum(sb.dropped for sb in _step_batches(cfg, lc, 6))
     assert dropped > 0    # same stream as above: drops are now *visible*
 
 
@@ -179,7 +185,7 @@ def test_loader_serializes_each_tree_exactly_once(monkeypatch):
                       auto_partition=True,
                       gen_kwargs=dict(turn_len_range=(4, 12), num_turns=2))
     evicted = 0
-    for sb in step_batches(cfg, lc, steps):
+    for sb in _step_batches(cfg, lc, steps):
         # an oversized tree that individually fits one row can only be
         # there because the planner evicted it to make the step fit
         evicted += sum(serialize_tree(t).n <= lc.seq_len

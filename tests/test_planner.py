@@ -326,8 +326,8 @@ def test_planner_matches_two_branch(family, impl):
 
 
 def test_planner_streams_deterministic():
-    """step_batches and execution_plans must see the same schedule — both
-    wrap one deterministic planner stream."""
+    """Every consumer of the planner (``plans``, the deprecated loader
+    wrappers) sees the same schedule — one deterministic plan stream."""
     cfg = tiny_cfg("dense")
     lc = _lc()
     a = [(ps.index, len(ps.fits), len(ps.oversized), ps.dropped)

@@ -201,6 +201,69 @@ def test_rollouts_to_tree_merges_prefixes_and_normalizes():
     assert tree.num_unique_tokens() < sum(len(s) for s in seqs)
 
 
+def test_rollouts_to_tree_identical_rollouts():
+    """K identical rollouts: one shared chain, every leaf a duplicate
+    (empty) branch, all advantages zero (zero reward variance) — the tree
+    still trains, it just contributes a zero RL gradient."""
+    rng = np.random.default_rng(4)
+    seq = rng.integers(0, 50, 12).astype(np.int32)
+    K = 4
+    tree = rollouts_to_tree([seq.copy() for _ in range(K)], [0.7] * K,
+                            prompt_len=5)
+    assert tree.num_leaves() == K
+    # the token content is stored once — full sharing
+    assert tree.num_unique_tokens() == len(seq)
+    for p in tree.paths():
+        np.testing.assert_array_equal(np.concatenate(
+            [n.tokens for n in p]), seq)
+        assert p[-1].branch_adv == 0.0
+    ser = serialize_tree(tree, loss_mode="rl")
+    assert np.isfinite(ser.weight).all()
+    assert ser.weight.sum() == 0.0          # zero advantage ⇒ zero loss
+
+
+def test_rollouts_to_tree_zero_variance_rewards():
+    """Distinct rollouts with equal rewards: normalized advantages are
+    all zero; normalize=False keeps the raw rewards."""
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, 50, 4).astype(np.int32)
+    seqs = [np.concatenate([prompt, rng.integers(0, 50, n)
+                            .astype(np.int32)]) for n in (3, 5, 6)]
+    tree = rollouts_to_tree(seqs, [2.5] * 3, prompt_len=len(prompt))
+    assert all(p[-1].branch_adv == 0.0 for p in tree.paths())
+    raw = rollouts_to_tree(seqs, [2.5] * 3, prompt_len=len(prompt),
+                           normalize=False)
+    assert all(p[-1].branch_adv == 2.5 for p in raw.paths())
+
+
+def test_rollouts_to_tree_token_multiset_property():
+    """Property, over many random rollout groups: the tree's root-to-leaf
+    paths reproduce EXACTLY the input sequences (as a multiset), prompt
+    tokens never carry loss, and merging only ever shrinks the token
+    count."""
+    for seed in range(10):
+        rng = np.random.default_rng(100 + seed)
+        P = int(rng.integers(1, 8))
+        prompt = rng.integers(0, 30, P).astype(np.int32)
+        K = int(rng.integers(2, 7))
+        seqs = []
+        for _ in range(K):
+            # low vocab + short tails → frequent shared prefixes/dupes
+            tail = rng.integers(0, 5, rng.integers(0, 7)).astype(np.int32)
+            seqs.append(np.concatenate([prompt, tail]))
+        rewards = rng.normal(size=K).tolist()
+        tree = rollouts_to_tree(seqs, rewards, prompt_len=P)
+        got = sorted(tuple(np.concatenate([n.tokens for n in p]).tolist())
+                     for p in tree.paths())
+        want = sorted(tuple(s.tolist()) for s in seqs)
+        assert got == want, seed
+        assert tree.num_leaves() == K
+        assert tree.num_unique_tokens() <= sum(len(s) for s in seqs)
+        ser = serialize_tree(tree, loss_mode="rl")
+        assert np.isfinite(ser.weight).all()
+        assert ser.weight[:P].sum() == 0.0   # prompt is never trained
+
+
 def test_grpo_tree_generator():
     t = grpo_tree(np.random.default_rng(0), vocab_size=97, num_turns=3,
                   turn_len_range=(4, 10))

@@ -1,5 +1,6 @@
 """Serving path: decode-with-cache equals the training forward, for every
-family; sliding-window cache; audio enc-dec decode with cross-attention."""
+family; sliding-window cache; audio enc-dec decode with cross-attention.
+All through the DecodeSession API (prefill / fork / step)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -12,7 +13,7 @@ from repro.models.attention import project_cross_kv
 from repro.models.layers import logits_from_hidden
 from repro.models.model import (init_params, needs_chunks, prepare_batch)
 from repro.models.transformer import forward
-from repro.serve.decode import decode_step, init_cache
+from repro.serve.session import DecodeSession
 
 pytestmark = pytest.mark.slow  # per-family decode loops, ~2 min
 
@@ -36,14 +37,12 @@ def test_decode_matches_forward(family):
     b = _chain_batch(cfg, toks, chunk)
     h, _ = forward(cfg, params, b)
     ref = logits_from_hidden(params["embed"], params.get("lm_head"), h)[0]
-    cache = init_cache(cfg, 1, S)
+    sess = DecodeSession.create(cfg, params, buf_len=S)
     outs = []
     for t in range(S):
-        lg, cache = decode_step(cfg, params, cache,
-                                jnp.asarray(toks[None, t:t + 1]),
-                                jnp.asarray([t], jnp.int32),
-                                jnp.asarray(t, jnp.int32))
+        lg = sess.step(toks[t:t + 1])
         outs.append(lg[0])
+    assert sess.t == S and sess.stats.decode_tokens == S
     dec = jnp.stack(outs)
     np.testing.assert_allclose(np.asarray(dec), np.asarray(ref),
                                atol=5e-4, rtol=5e-4)
@@ -57,16 +56,14 @@ def test_sliding_window_decode_masks_old_tokens():
     rng = np.random.default_rng(1)
     S = 12
     toks = rng.integers(0, 89, S).astype(np.int32)
-    # full cache vs ring cache of window size must agree (window masking)
-    caches = [init_cache(cfg, 1, S), init_cache(cfg, 1, 4)]
+    # full cache vs ring cache of window size must agree (window masking);
+    # the session owns the ring-slot arithmetic (t % buf_len)
+    sessions = [DecodeSession.create(cfg, params, buf_len=S),
+                DecodeSession.create(cfg, params, buf_len=4)]
     outs = [[], []]
     for t in range(S):
-        for ci, cache in enumerate(caches):
-            T = cache["g0"]["k"].shape[2]
-            lg, caches[ci] = decode_step(
-                cfg, params, cache, jnp.asarray(toks[None, t:t + 1]),
-                jnp.asarray([t], jnp.int32), jnp.asarray(t % T, jnp.int32))
-            outs[ci].append(lg[0])
+        for ci, sess in enumerate(sessions):
+            outs[ci].append(sess.step(toks[t:t + 1])[0])
     np.testing.assert_allclose(np.asarray(jnp.stack(outs[0])),
                                np.asarray(jnp.stack(outs[1])),
                                atol=1e-5, rtol=1e-5)
@@ -87,7 +84,7 @@ def test_audio_encdec_decode():
     h, _ = forward(cfg, params, b)
     ref = logits_from_hidden(params["embed"], params.get("lm_head"), h)[0]
 
-    # decode: encoder out → cross cache, then token-by-token
+    # decode: encoder out → cross cache via load_cross, then token-by-token
     from repro.models.transformer import _scan_group
     from repro.models.layers import rmsnorm
     enc_meta = dict(
@@ -99,8 +96,8 @@ def test_audio_encdec_decode():
                            jnp.asarray(frames), enc_meta, "ref")
     enc_out = rmsnorm(params["enc_norm"], enc_x, cfg.norm_eps)
 
-    cache = init_cache(cfg, B, S, enc_len=F)
-    # fill cross K/V per decoder layer
+    sess = DecodeSession.create(cfg, params, buf_len=S, enc_len=F)
+    # per-decoder-layer cross K/V
     dec_stack = params["layer_stacks"][0]
     n_dec = cfg.encdec.dec_layers
     ks, vs = [], []
@@ -109,15 +106,10 @@ def test_audio_encdec_decode():
         k, v = project_cross_kv(lp["xattn"], cfg.attn, enc_out)
         ks.append(k)
         vs.append(v)
-    cache["cross"]["k"] = jnp.stack(ks).astype(cache["cross"]["k"].dtype)
-    cache["cross"]["v"] = jnp.stack(vs).astype(cache["cross"]["v"].dtype)
+    sess.load_cross(jnp.stack(ks), jnp.stack(vs))
 
     outs = []
     for t in range(S):
-        lg, cache = decode_step(cfg, params, cache,
-                                jnp.asarray(toks[None, t:t + 1]),
-                                jnp.asarray([t], jnp.int32),
-                                jnp.asarray(t, jnp.int32))
-        outs.append(lg[0])
+        outs.append(sess.step(toks[t:t + 1])[0])
     np.testing.assert_allclose(np.asarray(jnp.stack(outs)),
                                np.asarray(ref), atol=5e-4, rtol=5e-4)

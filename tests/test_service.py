@@ -1,0 +1,216 @@
+"""Async tree-RL service: rollout groups → advantage trees → live planner
+source → engine steps, with bounded staleness and exact prefix-KV token
+accounting; frozen rollouts reproduce the offline RL gradients; the CLI
+soak runs the whole loop end to end (slow)."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_cfg
+from repro.data.loader import LoaderConfig
+from repro.models.model import init_params
+from repro.serve.rollout import RolloutConfig, rollout_group
+from repro.serve.service import (AsyncTreeRLService, ServiceConfig,
+                                 WeightStore)
+from repro.train.checkpoint import (load_checkpoint, load_meta,
+                                    save_checkpoint)
+from repro.train.engine import TreeTrainEngine
+from repro.train.optimizer import OptimizerConfig, init_opt_state
+from repro.train.planner import PlannerConfig, plans
+
+
+RC = RolloutConfig(k=3, prompt_len=6, max_new=4)
+
+
+# ---------------------------------------------------------------------------
+# rollout groups: shared-prefix accounting + tree shape
+# ---------------------------------------------------------------------------
+
+def test_rollout_group_prefix_computed_once():
+    cfg = tiny_cfg("dense")
+    params = init_params(cfg, jax.random.key(0))
+    prompt = np.arange(RC.prompt_len, dtype=np.int32)
+    tree, gs = rollout_group(cfg, params, prompt, RC, jax.random.key(1))
+    # THE acceptance number: the prefix was computed once, not K times
+    assert gs.prefill_tokens == RC.prompt_len
+    assert gs.saved_prefill_tokens == (RC.k - 1) * RC.prompt_len
+    assert gs.decode_tokens == RC.k * (RC.max_new - 1)
+    assert len(gs.rewards) == RC.k
+    # every branch is prompt + max_new sampled tokens, merged as a trie
+    paths = tree.paths()
+    assert len(paths) == RC.k
+    for p in paths:
+        toks = np.concatenate([n.tokens for n in p])
+        assert len(toks) == RC.prompt_len + RC.max_new
+        np.testing.assert_array_equal(toks[:RC.prompt_len], prompt)
+    assert tree.num_unique_tokens() <= RC.prompt_len + RC.k * RC.max_new
+
+
+def test_rollout_group_greedy_branches_collapse():
+    """temperature 0 → all branches sample identically → the merged trie
+    is one chain plus empty duplicate leaves, advantages all zero."""
+    cfg = tiny_cfg("dense")
+    params = init_params(cfg, jax.random.key(0))
+    rc = RolloutConfig(k=3, prompt_len=6, max_new=4, temperature=0.0)
+    tree, gs = rollout_group(cfg, params,
+                             np.arange(6, dtype=np.int32), rc,
+                             jax.random.key(1))
+    assert tree.num_unique_tokens() == rc.prompt_len + rc.max_new
+    assert all(a == b for a, b in zip(gs.rewards, gs.rewards[1:]))
+    assert all(p[-1].branch_adv == 0.0 for p in tree.paths())
+
+
+# ---------------------------------------------------------------------------
+# WeightStore: versions, gating, donation safety
+# ---------------------------------------------------------------------------
+
+def test_weight_store_versions_and_copies():
+    params = {"w": jnp.arange(4.0)}
+    store = WeightStore(params, version=0)
+    got, ver = store.get()
+    assert ver == 0
+    assert got["w"] is not params["w"]           # deep-copied on ingest
+    np.testing.assert_array_equal(np.asarray(got["w"]),
+                                  np.asarray(params["w"]))
+    assert not store.wait_for(1, timeout=0.05)   # nothing published yet
+    new = {"w": jnp.ones(4)}
+    store.publish(new, version=3)
+    assert store.wait_for(1, timeout=0.05)
+    got2, ver2 = store.get()
+    assert ver2 == 3
+    assert got2["w"] is not new["w"]             # publish copies too
+    np.testing.assert_array_equal(np.asarray(got2["w"]), np.ones(4))
+
+
+# ---------------------------------------------------------------------------
+# the loop: service → planner → engine, bounded staleness, zero drops
+# ---------------------------------------------------------------------------
+
+def test_async_service_closes_the_loop():
+    cfg = tiny_cfg("dense")
+    params = init_params(cfg, jax.random.key(0))
+    opt_state = init_opt_state(params)
+    steps = 3
+    lc = LoaderConfig(seq_len=64, batch_rows=2, trees_per_batch=2,
+                      mode="tree", seed=0, loss_mode="rl",
+                      auto_partition=True)
+    pcfg = PlannerConfig(lookahead=1, plan_workers=1, max_rows=2)
+    sc = ServiceConfig(groups_per_step=2, max_ahead_steps=1, rollout=RC,
+                       seed=0, gate_timeout_s=60.0)
+    store = WeightStore(params, version=0)
+    engine = TreeTrainEngine(cfg, OptimizerConfig(lr=1e-3, warmup_steps=2,
+                                                  total_steps=steps),
+                             weight_store=store)
+    svc = AsyncTreeRLService(cfg, store, sc, num_steps=steps).start()
+    pipe = plans(cfg, lc, svc.tree_batches(), pcfg)
+
+    losses, dropped = [], 0
+    for ps in pipe:
+        plan = ps.execution_plan()
+        dropped += plan.dropped
+        if plan.is_empty:
+            continue
+        assert plan.versions is not None         # live trees carry versions
+        params, opt_state, m = engine.step(params, opt_state, plan)
+        losses.append(m["loss"])
+        assert "max_lag" in m
+    svc.join(10)
+
+    assert svc._error is None
+    assert len(losses) >= 2 and dropped == 0
+    assert all(np.isfinite(losses))
+    # bounded staleness, audited on BOTH sides of the queue
+    bound = sc.max_ahead_steps + pcfg.lookahead - 1
+    assert engine.max_lag_seen <= bound
+    assert svc.stats.max_gen_lag <= sc.max_ahead_steps
+    assert svc.stats.trees_generated == steps * sc.groups_per_step
+    # group-level prefix reuse survives aggregation
+    assert svc.stats.prefill_tokens == \
+        steps * sc.groups_per_step * RC.prompt_len
+    assert svc.stats.saved_prefill_tokens == \
+        steps * sc.groups_per_step * (RC.k - 1) * RC.prompt_len
+
+
+def test_service_generation_error_reaches_consumer():
+    cfg = tiny_cfg("dense")
+    store = WeightStore({"w": jnp.zeros(1)})     # junk params → rollout dies
+    sc = ServiceConfig(groups_per_step=1, max_ahead_steps=1, rollout=RC)
+    svc = AsyncTreeRLService(cfg, store, sc, num_steps=1).start()
+    with pytest.raises(RuntimeError, match="rollout generation failed"):
+        for _ in svc.tree_batches():
+            pass
+
+
+# ---------------------------------------------------------------------------
+# frozen rollouts: online plan path ≡ offline loss_mode="rl" grads
+# ---------------------------------------------------------------------------
+
+def test_frozen_rollout_grads_match_offline():
+    from repro.launch.rl_loop import check_frozen_grads
+    cfg = tiny_cfg("dense")
+    params = init_params(cfg, jax.random.key(0))
+    lc = LoaderConfig(seq_len=64, batch_rows=2, trees_per_batch=2,
+                      mode="tree", seed=0, loss_mode="rl",
+                      auto_partition=True)
+    pcfg = PlannerConfig(lookahead=1, max_rows=2)
+    trees = [rollout_group(cfg, params,
+                           np.arange(RC.prompt_len, dtype=np.int32) + g,
+                           RC, jax.random.key(g))[0] for g in range(2)]
+    err = check_frozen_grads(cfg, lc, pcfg, params, trees, "ref")
+    assert err <= 1e-6, err
+
+
+# ---------------------------------------------------------------------------
+# checkpoint: mid-stream resume point round-trips
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_with_meta(tmp_path):
+    cfg = tiny_cfg("dense")
+    params = init_params(cfg, jax.random.key(3))
+    opt_state = init_opt_state(params)
+    opt_state["step"] = jnp.asarray(7)
+    path = str(tmp_path / "ck")
+    save_checkpoint(path, params, opt_state,
+                    meta={"arch": cfg.name, "steps": 7})
+    p0 = init_params(cfg, jax.random.key(4))
+    o0 = init_opt_state(p0)
+    p1, o1 = load_checkpoint(path, p0, o0)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(np.asarray(o1["step"])) == 7
+    meta = load_meta(path)
+    assert meta["steps"] == 7 and meta["arch"] == cfg.name
+
+
+# ---------------------------------------------------------------------------
+# the CLI soak (slow): overlapped generation, grad check, ckpt resume
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_rl_loop_cli_soak(tmp_path):
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    ck = str(tmp_path / "ck")
+    base = [sys.executable, "-m", "repro.launch.rl_loop", "--arch",
+            "qwen3-8b", "--smoke", "--check-grads"]
+    r = subprocess.run(base + ["--steps", "4", "--save", ck,
+                               "--ckpt-every", "2"],
+                       capture_output=True, text=True, timeout=560,
+                       env=env, cwd=root)
+    assert r.returncode == 0, r.stdout + r.stderr
+    out = r.stdout
+    assert "0 dropped" in out and "max lag 1 (bound 1)" in out
+    assert "grad check: max-rel 0.00e+00" in out
+    # resume picks up at the saved step and keeps the staleness bound
+    r2 = subprocess.run(base + ["--steps", "2", "--resume", ck],
+                        capture_output=True, text=True, timeout=560,
+                        env=env, cwd=root)
+    assert r2.returncode == 0, r2.stdout + r2.stderr
+    assert "resumed" in r2.stdout and "@ step 4" in r2.stdout
+    assert "0 dropped" in r2.stdout

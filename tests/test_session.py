@@ -1,0 +1,239 @@
+"""DecodeSession API: shared-prefix parallel prefill equals the step
+loop, fork reuses the prefix KV bit-exactly, incremental prefill extends
+the chain, snapshots are independent, and the old free functions warn."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_cfg
+from repro.models.model import init_params
+from repro.serve.session import DecodeSession
+
+
+def _toks(seed, n, vocab=89):
+    return np.random.default_rng(seed).integers(0, vocab, n).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# parallel prefill ≡ step-wise prefill (cache contents AND logits)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", ["dense", "moe"])
+def test_parallel_prefill_matches_step_loop(family):
+    cfg = tiny_cfg(family)
+    params = init_params(cfg, jax.random.key(0))
+    toks = _toks(0, 10)
+    P, buf = len(toks), len(toks) + 4
+
+    fast = DecodeSession.create(cfg, params, buf_len=buf)
+    assert fast._can_parallel_prefill(P)
+    lg_fast = fast.prefill(toks)
+
+    slow = DecodeSession.create(cfg, params, buf_len=buf)
+    lg_slow = slow._prefill_steps(toks)
+    slow.stats.prefill_tokens += P
+
+    atol = 1e-5 if family == "dense" else 1e-5
+    np.testing.assert_allclose(np.asarray(lg_fast), np.asarray(lg_slow),
+                               atol=atol, rtol=1e-5)
+    # the written cache slots agree too — later decode steps see the same
+    # keys/values/positions either way
+    for name in fast.cache:
+        if name == "cross":
+            continue
+        for leaf in ("k", "v", "pos"):
+            a = np.asarray(fast.cache[name][leaf][:, :, :P])
+            b = np.asarray(slow.cache[name][leaf][:, :, :P])
+            np.testing.assert_allclose(a, b, atol=atol, rtol=1e-5)
+    assert fast.t == slow.t == P
+    assert fast.stats.prefill_tokens == P
+    # decode continues identically from either prefill
+    nxt = _toks(1, 1)
+    np.testing.assert_allclose(np.asarray(fast.step(nxt)),
+                               np.asarray(slow.step(nxt)),
+                               atol=atol, rtol=1e-5)
+
+
+def test_incremental_prefill_matches_single():
+    """A second prefill on a session holding context rides the cached
+    slots in as gateway ancestors — same result as one big prefill."""
+    cfg = tiny_cfg("dense")
+    params = init_params(cfg, jax.random.key(0))
+    toks = _toks(2, 12)
+
+    whole = DecodeSession.create(cfg, params, buf_len=16)
+    lg_whole = whole.prefill(toks)
+
+    split = DecodeSession.create(cfg, params, buf_len=16)
+    split.prefill(toks[:5])
+    lg_split = split.prefill(toks[5:])
+
+    np.testing.assert_allclose(np.asarray(lg_split), np.asarray(lg_whole),
+                               atol=1e-5, rtol=1e-5)
+    for name in whole.cache:
+        for leaf in ("k", "v", "pos"):
+            np.testing.assert_allclose(
+                np.asarray(split.cache[name][leaf][:, :, :12]),
+                np.asarray(whole.cache[name][leaf][:, :, :12]),
+                atol=1e-5, rtol=1e-5)
+    assert split.t == whole.t == 12
+    assert split.stats.prefill_tokens == 12
+
+
+def test_prefill_falls_back_when_unsupported():
+    # sliding-window configs use the step loop (ring slots alias)
+    cfg = tiny_cfg("dense")
+    cfg = cfg.replace(attn=dataclasses.replace(cfg.attn, window=4))
+    params = init_params(cfg, jax.random.key(0))
+    sess = DecodeSession.create(cfg, params, buf_len=16)
+    assert not sess._can_parallel_prefill(6)
+    lg = sess.prefill(_toks(3, 6))
+    assert lg.shape == (1, cfg.padded_vocab)
+    assert sess.t == 6 and sess.stats.prefill_tokens == 6
+
+
+# ---------------------------------------------------------------------------
+# fork: K branches share the prefix KV, bit-exact in fp32
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", ["dense", "moe"])
+def test_fork_bitexact_vs_unshared_prefill(family):
+    """Branches decoded off one forked prefix equal K independent
+    sessions that each recomputed the prefix — bit for bit (fp32), while
+    the forked group computed the prefix exactly once."""
+    cfg = tiny_cfg(family)
+    params = init_params(cfg, jax.random.key(0))
+    prompt = _toks(4, 8)
+    K, steps = 3, 4
+    branch_toks = np.stack([_toks(10 + k, steps) for k in range(K)])
+
+    shared = DecodeSession.create(cfg, params, buf_len=16)
+    shared.prefill(prompt)
+    forked = shared.fork(K)
+    assert forked.batch == K and forked.t == 8
+    assert forked.stats is shared.stats          # group accounting
+
+    # reference: a K-row session where every row pays its own prefill
+    solo = DecodeSession.create(cfg, params, batch=K, buf_len=16)
+    solo.prefill(prompt)
+
+    for t in range(steps):
+        lg_fork = np.asarray(forked.step(branch_toks[:, t]))
+        lg_solo = np.asarray(solo.step(branch_toks[:, t]))
+        np.testing.assert_array_equal(lg_fork, lg_solo)
+
+    # the proof of prefix reuse: one prefill for K branches
+    assert shared.stats.prefill_tokens == len(prompt)
+    assert solo.stats.prefill_tokens == K * len(prompt)
+    assert forked.stats.decode_tokens == K * steps
+
+
+def test_fork_requires_single_branch():
+    cfg = tiny_cfg("dense")
+    params = init_params(cfg, jax.random.key(0))
+    sess = DecodeSession.create(cfg, params, batch=2, buf_len=8)
+    with pytest.raises(AssertionError):
+        sess.fork(3)
+
+
+def test_snapshot_is_independent():
+    cfg = tiny_cfg("dense")
+    params = init_params(cfg, jax.random.key(0))
+    sess = DecodeSession.create(cfg, params, buf_len=16)
+    sess.prefill(_toks(5, 6))
+    snap = sess.snapshot()
+    tok = _toks(6, 1)
+    lg_a = np.asarray(sess.step(tok))
+    assert snap.t == 6 and sess.t == 7       # snapshot untouched
+    lg_b = np.asarray(snap.step(tok))        # immutable caches → same path
+    np.testing.assert_array_equal(lg_a, lg_b)
+    assert snap.stats is sess.stats
+
+
+# ---------------------------------------------------------------------------
+# ops.prefill_attention ≡ full-chain tree_attention
+# ---------------------------------------------------------------------------
+
+def test_prefill_attention_matches_full_chain():
+    from repro.kernels.ops import prefill_attention, tree_attention
+    rng = np.random.default_rng(7)
+    B, A, S, H, hd = 2, 5, 6, 4, 8
+    q_full = rng.normal(size=(B, A + S, H, hd)).astype(np.float32)
+    k_full = rng.normal(size=(B, A + S, H, hd)).astype(np.float32)
+    v_full = rng.normal(size=(B, A + S, H, hd)).astype(np.float32)
+    scale = hd ** -0.5
+    kv_last = jnp.broadcast_to(jnp.asarray(A + S - 1, jnp.int32),
+                               (B, A + S))
+    ref = tree_attention(jnp.asarray(q_full), jnp.asarray(k_full),
+                         jnp.asarray(v_full), kv_last, scale)
+
+    # context path: tail queries against (cached ctx) + (new kv)
+    out = prefill_attention(jnp.asarray(q_full[:, A:]),
+                            jnp.asarray(k_full[:, A:]),
+                            jnp.asarray(v_full[:, A:]), scale,
+                            ctx_k=jnp.asarray(k_full[:, :A]),
+                            ctx_v=jnp.asarray(v_full[:, :A]),
+                            ctx_valid=jnp.ones((B, A), bool))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref[:, A:]),
+                               atol=1e-5, rtol=1e-5)
+
+    # no-context path: plain causal chain
+    out0 = prefill_attention(jnp.asarray(q_full), jnp.asarray(k_full),
+                             jnp.asarray(v_full), scale)
+    np.testing.assert_allclose(np.asarray(out0), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+
+    # an invalid ctx row is invisible: equals attention w/o that row
+    valid = jnp.ones((B, A), bool).at[:, 2].set(False)
+    out_m = prefill_attention(jnp.asarray(q_full[:, A:]),
+                              jnp.asarray(k_full[:, A:]),
+                              jnp.asarray(v_full[:, A:]), scale,
+                              ctx_k=jnp.asarray(k_full[:, :A]),
+                              ctx_v=jnp.asarray(v_full[:, :A]),
+                              ctx_valid=valid)
+    keep = [i for i in range(A) if i != 2]
+    sub = np.concatenate([k_full[:, keep], k_full[:, A:]], axis=1)
+    subv = np.concatenate([v_full[:, keep], v_full[:, A:]], axis=1)
+    kv_last2 = jnp.broadcast_to(jnp.asarray(A - 1 + S, jnp.int32),
+                                (B, A - 1 + S))
+    ref_m = tree_attention(jnp.asarray(q_full[:, A:]), jnp.asarray(sub),
+                           jnp.asarray(subv), kv_last2, scale,
+                           q_off=A - 1)
+    np.testing.assert_allclose(np.asarray(out_m), np.asarray(ref_m),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# deprecated wrappers still work, but warn
+# ---------------------------------------------------------------------------
+
+def test_deprecated_decode_free_functions_warn():
+    from repro.serve.decode import decode_step, init_cache
+    cfg = tiny_cfg("dense")
+    params = init_params(cfg, jax.random.key(0))
+    with pytest.warns(DeprecationWarning, match="DecodeSession"):
+        cache = init_cache(cfg, 1, 8)
+    with pytest.warns(DeprecationWarning, match="DecodeSession"):
+        lg, cache = decode_step(cfg, params, cache,
+                                jnp.zeros((1, 1), jnp.int32),
+                                jnp.zeros((1,), jnp.int32),
+                                jnp.asarray(0, jnp.int32))
+    assert lg.shape == (1, cfg.padded_vocab)
+
+
+def test_deprecated_loader_wrappers_warn():
+    from repro.data.loader import (LoaderConfig, execution_plans,
+                                   step_batches)
+    cfg = tiny_cfg("dense")
+    lc = LoaderConfig(seq_len=96, batch_rows=2, trees_per_batch=2,
+                      mode="tree", seed=0, auto_partition=True,
+                      gen_kwargs=dict(turn_len_range=(4, 8), num_turns=2))
+    with pytest.warns(DeprecationWarning, match="train.planner.plans"):
+        sb = next(step_batches(cfg, lc, 1))
+    assert sb.dropped == 0
+    with pytest.warns(DeprecationWarning, match="train.planner.plans"):
+        plan = next(execution_plans(cfg, lc, 1))
+    assert plan.num_trees == sb.num_trees
