@@ -1,0 +1,29 @@
+"""treelint — static auditor for the tree-training engine's invariants.
+
+Three passes, all *static* (nothing is compiled or executed on device):
+
+  jaxpr audit       trace every registered jitted entrypoint with abstract
+                    inputs and walk the ClosedJaxpr: no host
+                    callbacks (the one-host-sync proof), declared buffers
+                    donated (params/opt_state/accumulator/KV cache), fp32
+                    accumulation contracts honoured
+                    (``repro.analysis.jaxpr_audit`` +
+                    ``repro.analysis.registry``);
+  signature lint    the reachable jit-signature universe from planner
+                    outputs (packed + partition-wave pow2 buckets) — every
+                    signature a real planner run emits must fall inside
+                    it; the universe enumeration is the static front half
+                    of AOT warmup (``repro.analysis.signatures``);
+  mask soundness    exhaustive boundary-value verification that the Pallas
+                    ``block_live`` skip predicate never skips a block
+                    containing a visible (query, key) pair under the
+                    ref.py visibility oracle (``repro.analysis.mask_check``).
+
+CLI: ``python -m repro.analysis.lint [--fast]`` — exits non-zero on any
+finding.  New jitted entrypoints FAIL lint until they declare their
+sync/donation/dtype contract in ``registry.py`` (or are explicitly
+allow-listed with a reason).
+"""
+from repro.analysis.jaxpr_audit import Finding, audit_target  # noqa: F401
+from repro.analysis.registry import (AuditTarget, Contract,  # noqa: F401
+                                     build_targets)

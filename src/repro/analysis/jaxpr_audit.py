@@ -1,0 +1,256 @@
+"""Jaxpr-level auditor: trace (never execute) a jitted entrypoint with
+abstract inputs and prove its contract on the resulting ClosedJaxpr +
+lowering:
+
+  callbacks   no host-callback primitive anywhere (recursing into scan /
+              cond / remat sub-jaxprs) — the static half of the engine's
+              one-host-sync proof: a jaxpr with zero callbacks cannot
+              transfer to host mid-step, so the only syncs are what the
+              caller does with the outputs (checked by the AST pass in
+              ``registry.host_transfer_sites``);
+  donation    the lowering's ``args_info`` must donate exactly the
+              declared buffers (params/opt_state/grad-accumulator/KV
+              cache) — an undonated accumulator silently doubles peak
+              HBM;
+  dtype       declared args/outputs are fp32, and the *accumulation
+              chain* feeding each fp32 output runs in fp32: walking back
+              through adds and layout-only ops, every add must produce
+              fp32, and a low-precision sum upcast only at the output
+              (accumulate-in-bf16-then-convert) is flagged.  The
+              sanctioned pattern is ``acc + convert(g)->f32`` — upcasts
+              of *addends* are exactly the dtype policy.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:                                     # jax ≥ 0.4.36
+    from jax.extend.core import ClosedJaxpr, Jaxpr, Literal
+except ImportError:                      # pragma: no cover - older jax
+    from jax.core import ClosedJaxpr, Jaxpr, Literal
+
+
+@dataclass
+class Finding:
+    """One proven contract violation."""
+    target: str
+    check: str        # callback | donation | dtype | coverage | ...
+    message: str
+
+    def __str__(self) -> str:
+        return f"[{self.check}] {self.target}: {self.message}"
+
+
+# host-callback primitives: any of these in a step's jaxpr means a
+# device→host round trip inside the step
+CALLBACK_PRIMS = frozenset({
+    "debug_callback", "pure_callback", "io_callback", "callback",
+    "outside_call", "host_callback", "infeed", "outfeed", "debug_print",
+})
+
+# layout-only primitives: dtype-preserving, safe to walk through when
+# following an accumulation chain backwards
+_PASS_PRIMS = frozenset({
+    "reshape", "broadcast_in_dim", "transpose", "squeeze", "expand_dims",
+    "slice", "dynamic_slice", "dynamic_update_slice", "concatenate",
+    "pad", "rev", "gather", "select_n", "copy", "stop_gradient",
+})
+_ADD_PRIMS = frozenset({"add", "add_any"})
+_F32 = (jnp.dtype(jnp.float32), jnp.dtype(jnp.float64))
+
+
+def _sub_jaxprs(v: Any) -> Iterable[Jaxpr]:
+    if isinstance(v, ClosedJaxpr):
+        yield v.jaxpr
+    elif isinstance(v, Jaxpr):
+        yield v
+    elif isinstance(v, (list, tuple)):
+        for x in v:
+            yield from _sub_jaxprs(x)
+
+
+def find_callbacks(closed: ClosedJaxpr) -> list[str]:
+    """All callback-primitive occurrences, recursing into sub-jaxprs
+    (scan bodies, cond branches, remat/custom-vjp closures)."""
+    hits: list[str] = []
+    stack = [closed.jaxpr]
+    seen: set[int] = set()
+    while stack:
+        jx = stack.pop()
+        if id(jx) in seen:
+            continue
+        seen.add(id(jx))
+        for eqn in jx.eqns:
+            if eqn.primitive.name in CALLBACK_PRIMS:
+                hits.append(eqn.primitive.name)
+            for v in eqn.params.values():
+                stack.extend(_sub_jaxprs(v))
+    return hits
+
+
+# ---------------------------------------------------------------------------
+# Donation
+# ---------------------------------------------------------------------------
+
+def _arg_donations(lowered, i: int) -> list[bool]:
+    return [bool(a.donated)
+            for a in jax.tree.leaves(lowered.args_info[0][i])]
+
+
+def check_donation(target, lowered) -> list[Finding]:
+    out = []
+    for i in target.contract.donate:
+        d = _arg_donations(lowered, i)
+        if d and not all(d):
+            out.append(Finding(
+                target.name, "donation",
+                f"arg {i} must be donated (buffer reuse) but "
+                f"{d.count(False)}/{len(d)} leaves are not — a second "
+                f"live copy of this buffer survives the dispatch"))
+    for i in target.contract.keep:
+        d = _arg_donations(lowered, i)
+        if any(d):
+            out.append(Finding(
+                target.name, "donation",
+                f"arg {i} must NOT be donated (shared/reread buffer) but "
+                f"{sum(d)}/{len(d)} leaves are"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Dtype policy
+# ---------------------------------------------------------------------------
+
+def _float_leaves(tree) -> list:
+    return [l for l in jax.tree.leaves(tree)
+            if hasattr(l, "dtype") and jnp.issubdtype(l.dtype,
+                                                      jnp.floating)]
+
+
+def _out_parts(target, traced):
+    outs = getattr(traced, "out_info", None)
+    if outs is None:
+        outs = jax.eval_shape(target.fn, *target.args)
+    return outs if isinstance(outs, (tuple, list)) else (outs,)
+
+
+def check_fp32_args(target) -> list[Finding]:
+    out = []
+    for i in target.contract.fp32_args:
+        bad = {str(l.dtype) for l in _float_leaves(target.args[i])
+               if jnp.dtype(l.dtype) not in _F32}
+        if bad:
+            out.append(Finding(
+                target.name, "dtype",
+                f"arg {i} must hold fp32 accumulators, found "
+                f"{sorted(bad)}"))
+    return out
+
+
+def _accum_chain_problems(closed: ClosedJaxpr,
+                          out_leaf_idx: Iterable[int]) -> list[str]:
+    """Walk each flagged output leaf backwards through adds/layout ops;
+    report non-fp32 adds and low-precision sums upcast only at the
+    output.  ``through_add`` distinguishes the sanctioned pattern
+    (convert an *addend* up to fp32) from the violation (convert the
+    already-reduced sum)."""
+    var_eqn: dict[int, Any] = {}
+    for eqn in closed.jaxpr.eqns:
+        for ov in eqn.outvars:
+            var_eqn[id(ov)] = eqn
+    problems: list[str] = []
+    seen: set[tuple[int, bool]] = set()
+    stack = [(closed.jaxpr.outvars[i], False) for i in out_leaf_idx]
+    while stack:
+        v, through_add = stack.pop()
+        if isinstance(v, Literal) or (id(v), through_add) in seen:
+            continue
+        seen.add((id(v), through_add))
+        dt = getattr(getattr(v, "aval", None), "dtype", None)
+        if dt is None or not jnp.issubdtype(dt, jnp.floating):
+            continue
+        eqn = var_eqn.get(id(v))
+        if eqn is None:                       # input / constant
+            if jnp.dtype(dt) not in _F32:
+                problems.append(f"accumulation input is {dt}")
+            continue
+        name = eqn.primitive.name
+        if name == "convert_element_type":
+            src = getattr(getattr(eqn.invars[0], "aval", None), "dtype",
+                          None)
+            if (not through_add and src is not None
+                    and jnp.issubdtype(src, jnp.floating)
+                    and jnp.dtype(src).itemsize < 4):
+                problems.append(
+                    f"accumulator produced by upcasting a {src} value — "
+                    f"the accumulation ran below fp32")
+            continue                          # addend upcast: sanctioned
+        if name in _ADD_PRIMS:
+            if jnp.dtype(dt) not in _F32:
+                problems.append(f"accumulation add in {dt}")
+            stack.extend((iv, True) for iv in eqn.invars)
+            continue
+        if name in _PASS_PRIMS:
+            stack.extend((iv, through_add) for iv in eqn.invars)
+            continue
+        if jnp.dtype(dt) not in _F32:
+            problems.append(f"accumulator fed by {name} in {dt}")
+    return problems
+
+
+def check_fp32_outs(target, traced) -> list[Finding]:
+    contract = target.contract
+    if not contract.fp32_outs:
+        return []
+    out = []
+    parts = _out_parts(target, traced)
+    offsets = np.cumsum([0] + [len(jax.tree.leaves(p)) for p in parts])
+    for i in contract.fp32_outs:
+        part = parts[i]
+        bad = {str(l.dtype) for l in _float_leaves(part)
+               if jnp.dtype(l.dtype) not in _F32}
+        if bad:
+            out.append(Finding(
+                target.name, "dtype",
+                f"output {i} must be fp32, found {sorted(bad)}"))
+            continue
+        leaf_idx = range(offsets[i], offsets[i + 1])
+        for p in sorted(set(_accum_chain_problems(traced.jaxpr,
+                                                  leaf_idx))):
+            out.append(Finding(target.name, "dtype",
+                               f"output {i}: {p}"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The audit
+# ---------------------------------------------------------------------------
+
+def audit_target(target) -> list[Finding]:
+    """Trace + lower one registered entrypoint and prove its contract.
+    Nothing is compiled or executed."""
+    findings: list[Finding] = []
+    traced = target.fn.trace(*target.args)
+    cbs = find_callbacks(traced.jaxpr)
+    if len(cbs) > target.contract.max_callbacks:
+        findings.append(Finding(
+            target.name, "callback",
+            f"jaxpr contains host callbacks {sorted(set(cbs))} "
+            f"({len(cbs)} > allowed {target.contract.max_callbacks}) — "
+            f"each is a device→host round trip inside the step"))
+    findings += check_donation(target, traced.lower())
+    findings += check_fp32_args(target)
+    findings += check_fp32_outs(target, traced)
+    return findings
+
+
+def audit_all(targets) -> list[Finding]:
+    out: list[Finding] = []
+    for t in targets:
+        out.extend(audit_target(t))
+    return out

@@ -1,0 +1,168 @@
+"""treelint CLI: ``python -m repro.analysis.lint [--fast]``.
+
+Runs every static pass and exits non-zero on any finding:
+
+  1. jaxpr audit — trace each registered entrypoint per arch, prove the
+     callback/donation/dtype contracts (``jaxpr_audit`` + ``registry``);
+  2. jit-site coverage — every ``jax.jit`` under src/repro is audited or
+     allow-listed;
+  3. host-transfer AST — the engine funnels its ONE device→host read
+     through ``TreeTrainEngine._sync`` (together with pass 1 this is the
+     one-host-sync proof: zero in-jaxpr callbacks + one caller-side
+     transfer site);
+  4. signature lint — a real lookahead planner run emits only
+     in-universe jit signatures (``signatures``);
+  5. mask soundness — the Pallas block-skip predicate over the bucketed
+     boundary universe + packed random trees (``mask_check``).
+
+``--fast`` restricts to two smoke archs and the small mask universe
+(< 2 min, the CI fast gate); the full sweep runs nightly and writes the
+``treelint.json`` artifact via ``--out``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+FAST_ARCHS = ("qwen1p5_0p5b", "qwen3_30b_a3b")
+
+
+def _engine_host_transfer_findings() -> list:
+    """The engine's host-sync funnel contract: exactly one np/device_get
+    transfer site, inside ``TreeTrainEngine._sync``."""
+    import os
+
+    from repro.analysis.jaxpr_audit import Finding
+    from repro.analysis.registry import (host_transfer_sites,
+                                         repro_src_root)
+    path = os.path.join(repro_src_root(), "train", "engine.py")
+    sites = host_transfer_sites(path)
+    want = ["TreeTrainEngine._sync"]
+    got = [q for q, _ in sites]
+    if got != want:
+        return [Finding(
+            "train.engine", "host-transfer",
+            f"engine host-transfer sites {got} != {want}: every "
+            f"device→host read must funnel through _sync so host_syncs "
+            f"stays auditable (lines {[ln for _, ln in sites]})")]
+    return []
+
+
+def run_lint(archs, *, impl: str = "ref", lookahead: int = 2,
+             fast: bool = True, verbose: bool = True) -> tuple[list, dict]:
+    from repro.analysis import jaxpr_audit, mask_check, signatures
+    from repro.analysis.registry import (audit_loader_config,
+                                         build_targets,
+                                         coverage_findings)
+    from repro.configs import get_config
+    from repro.train.planner import PlannerConfig
+
+    def say(msg: str) -> None:
+        if verbose:
+            print(f"[treelint] {msg}", flush=True)
+
+    findings: list = []
+    report: dict = {"mode": "fast" if fast else "full", "archs": {}}
+    all_targets: list = []
+
+    for arch in archs:
+        t0 = time.perf_counter()
+        cfg = get_config(arch, smoke=True)
+        targets = build_targets(cfg, impl)
+        all_targets += targets
+        arch_f = jaxpr_audit.audit_all(targets)
+        findings += arch_f
+
+        lc = audit_loader_config(cfg)
+        pc = PlannerConfig(lookahead=lookahead, num_replicas=2)
+        src = signatures.synthetic_source(cfg, n_batches=2 * lookahead,
+                                          trees_per=lc.trees_per_batch)
+        sig_f, sig_rep = signatures.lint_signatures(cfg, lc, pc, src)
+        findings += sig_f
+        report["archs"][arch] = {
+            "targets": [t.name for t in targets],
+            "jaxpr_findings": len(arch_f),
+            "signatures": sig_rep,
+            "seconds": round(time.perf_counter() - t0, 2),
+        }
+        say(f"{arch}: {len(targets)} entrypoints audited, "
+            f"{sig_rep['signatures_distinct']} distinct jit signatures "
+            f"(AOT universe {sig_rep['aot_universe_size']}), "
+            f"{len(arch_f) + len(sig_f)} findings "
+            f"[{report['archs'][arch]['seconds']}s]")
+
+    cov = [jaxpr_audit.Finding("registry", "coverage", m)
+           for m in coverage_findings(all_targets)]
+    findings += cov
+    say(f"jit-site coverage: {len(cov)} uncovered sites")
+
+    findings += _engine_host_transfer_findings()
+
+    t0 = time.perf_counter()
+    mask_f, mask_rep = mask_check.check_predicate(fast=fast)
+    mask_f += mask_check.check_bwd_shares_predicate()
+    emp_f, emp_rep = mask_check.empirical_mask_check()
+    findings += mask_f + emp_f
+    report["mask"] = {**mask_rep, "empirical": emp_rep,
+                      "seconds": round(time.perf_counter() - t0, 2)}
+    say(f"mask soundness: {mask_rep['points']} boundary points over "
+        f"{mask_rep['buckets']} buckets, proven skip rate "
+        f"{mask_rep.get('proven_skip_rate', 0):.3f}, "
+        f"{len(mask_f) + len(emp_f)} findings "
+        f"[{report['mask']['seconds']}s]")
+
+    report["findings"] = [
+        {"target": f.target, "check": f.check, "message": f.message}
+        for f in findings]
+    return findings, report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="treelint: static jaxpr/plan/kernel auditor")
+    ap.add_argument("--fast", action="store_true",
+                    help="CI fast gate: two smoke archs, small mask "
+                         "universe")
+    ap.add_argument("--arch", action="append", default=None,
+                    help="audit this arch (repeatable; default: fast "
+                         "pair or all)")
+    ap.add_argument("--impl", default="ref", choices=("ref", "pallas"))
+    ap.add_argument("--lookahead", type=int, default=2,
+                    help="planner lookahead for the signature lint")
+    ap.add_argument("--out", default=None,
+                    help="write the JSON report here (treelint.json)")
+    ap.add_argument("-q", "--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.arch:
+        archs = args.arch
+    elif args.fast:
+        archs = list(FAST_ARCHS)
+    else:
+        from repro.configs import ARCH_IDS
+        archs = list(ARCH_IDS)
+
+    t0 = time.perf_counter()
+    findings, report = run_lint(archs, impl=args.impl,
+                                lookahead=args.lookahead, fast=args.fast,
+                                verbose=not args.quiet)
+    report["total_seconds"] = round(time.perf_counter() - t0, 2)
+
+    if args.out:
+        with open(args.out, "w") as fh:
+            json.dump(report, fh, indent=2, sort_keys=True)
+
+    for f in findings:
+        print(f"FINDING {f}", file=sys.stderr)
+    status = "FAILED" if findings else "OK"
+    if not args.quiet:
+        print(f"[treelint] {status}: {len(findings)} findings across "
+              f"{len(archs)} arch(s) in {report['total_seconds']}s")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

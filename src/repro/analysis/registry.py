@@ -1,0 +1,436 @@
+"""The audited-entrypoint registry: every jitted function the engine or
+server dispatches declares an :class:`AuditTarget` here — abstract inputs
+plus a :class:`Contract` of what its jaxpr must (not) contain.
+
+Coverage is *closed*: an AST pass (:func:`jit_sites` /
+:func:`coverage_findings`) enumerates every ``jax.jit(...)`` call site
+under ``src/repro`` and requires each to be either covered by a built
+target or allow-listed with a reason — so a new jitted entrypoint fails
+lint until it declares its sync/donation/dtype expectations.
+
+All inputs are ``jax.ShapeDtypeStruct``\\ s built with ``jax.eval_shape``
+over the real constructors (``init_params``, ``_init_cache``, a real
+host-side planner run over synthetic trees), so the audited shapes are
+exactly the shapes production traces — no device buffer is ever
+allocated.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.gateway import (_cut_caps_view, _names_sig, _slice_gw_row,
+                                _stack_gw_rows, assemble_child_gw)
+from repro.data.loader import LoaderConfig
+from repro.data.synthetic import random_tree
+from repro.models.model import needs_chunks
+from repro.models.transformer import init_params, layer_groups
+from repro.serve.decode import _init_cache
+from repro.serve.rollout import _decode_scan
+from repro.serve.session import _fork_exec, _prefill_exec, _step_exec
+from repro.train.engine import (NUM_SCALARS, _packed_exec_fn,
+                                _wave_exec_fns)
+from repro.train.optimizer import OptimizerConfig, init_opt_state
+from repro.train.planner import PlannerConfig, plan_window
+from repro.train.train_step import jitted_update, make_train_step
+
+
+@dataclass(frozen=True)
+class Contract:
+    """What an entrypoint's jaxpr/lowering must satisfy.
+
+    Positions index the *top-level* positional args (``donate`` / ``keep``
+    / ``fp32_args``) or the top-level components of the returned tuple
+    (``fp32_outs``)."""
+    max_callbacks: int = 0     # host callbacks allowed in the jaxpr
+    donate: tuple = ()         # args that MUST be donated (buffer reuse)
+    keep: tuple = ()           # args that must NOT be donated
+    fp32_args: tuple = ()      # args whose float leaves must be fp32
+    fp32_outs: tuple = ()      # outputs: fp32 leaves + fp32 add chain
+
+
+@dataclass
+class AuditTarget:
+    """One jitted entrypoint with its abstract inputs and contract.
+    ``covers`` lists the ``jax.jit`` call sites (``path::qualname``) this
+    target audits — consumed by the coverage pass."""
+    name: str
+    fn: Any
+    args: tuple
+    contract: Contract
+    covers: tuple = ()
+    notes: list = field(default_factory=list)
+
+
+# ---------------------------------------------------------------------------
+# Abstract-input builders
+# ---------------------------------------------------------------------------
+
+def abstractify(x):
+    """Pytree of arrays/np scalars → ShapeDtypeStructs (non-array leaves
+    pass through: python ints become weak-typed traced scalars, matching
+    what a real dispatch traces)."""
+    def one(leaf):
+        if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+            return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype)
+        return leaf
+    return jax.tree.map(one, x)
+
+
+def _f32_like(tree):
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, jnp.float32), tree)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def params_abstract(cfg: ModelConfig):
+    return jax.eval_shape(lambda k: init_params(cfg, k),
+                          jax.random.key(0))
+
+
+def _forest(seed: int, n: int, vocab: int):
+    rng = np.random.default_rng(seed)
+    return [random_tree(rng, vocab_size=vocab, max_depth=4,
+                        seg_len_range=(2, 9)) for _ in range(n)]
+
+
+def audit_loader_config(cfg: ModelConfig) -> LoaderConfig:
+    """The tiny schedule the auditor plans against: chunk-aligned seq/cap
+    small enough that the synthetic forest yields both packed rows and
+    (for partition-capable families) multi-wave partitions — the gateway
+    shapes."""
+    unit = cfg.ssm.chunk_size if needs_chunks(cfg) else 8
+    return LoaderConfig(seq_len=8 * unit, batch_rows=3, trees_per_batch=4,
+                        auto_partition=cfg.family in PARTITION_FAMILIES,
+                        capacity=6 * unit)
+
+
+# families partition_forward can execute (models/transformer) — other
+# families train packed-only, so the registry audits no wave targets
+PARTITION_FAMILIES = ("dense", "moe", "ssm", "hybrid")
+
+
+def demo_planned_step(cfg: ModelConfig, *, num_replicas: int = 2):
+    """A real (host-only) planner run whose winning step carries a packed
+    microbatch AND — for partition-capable families — gateway-bearing
+    partition waves: the full shape surface ``TreeTrainEngine.step``
+    dispatches.  Deterministic: scans seeds until the forest produces
+    one."""
+    lc = audit_loader_config(cfg)
+    want_waves = lc.auto_partition
+    pc = PlannerConfig(lookahead=2, num_replicas=num_replicas)
+    for seed in range(40):
+        window = [_forest(1000 * seed + b, lc.trees_per_batch,
+                          cfg.vocab_size) for b in range(pc.lookahead)]
+        for ps in plan_window(cfg, lc, pc, window):
+            if ps.is_empty:
+                continue
+            plan = ps.execution_plan()
+            if plan.packed is None:
+                continue
+            if not want_waves:
+                return ps, plan, lc, pc
+            if (plan.partition is not None
+                    and any(wp.has_gw for wp in plan.partition.waves)):
+                return ps, plan, lc, pc
+    raise RuntimeError(f"no packed+wave demo plan found for {cfg.name}")
+
+
+# ---------------------------------------------------------------------------
+# Target builders
+# ---------------------------------------------------------------------------
+
+def _packed_batch_abstract(plan) -> dict:
+    batch = dict(plan.packed.inputs)
+    batch["num_trees"] = max(plan.num_trees, 1)
+    return abstractify(batch)
+
+
+def _engine_targets(cfg: ModelConfig, impl: str, plan, params_a,
+                    opt_a) -> list[AuditTarget]:
+    acc_a = _f32_like(params_a)
+    scal_a = _sds((NUM_SCALARS,), jnp.float32)
+    scale_a = _sds((), jnp.float32)
+    batch_a = _packed_batch_abstract(plan)
+    targets = [
+        AuditTarget(
+            name=f"{cfg.name}:engine.packed+acc",
+            fn=_packed_exec_fn(cfg, impl, True, with_acc=True),
+            args=(params_a, batch_a, acc_a, scal_a),
+            contract=Contract(donate=(2, 3), keep=(0,),
+                              fp32_args=(2, 3), fp32_outs=(0, 1)),
+            covers=("repro/train/engine.py::_packed_exec_fn",)),
+        AuditTarget(
+            name=f"{cfg.name}:engine.packed",
+            fn=_packed_exec_fn(cfg, impl, True, with_acc=False),
+            args=(params_a, batch_a, scal_a),
+            contract=Contract(donate=(2,), keep=(0,),
+                              fp32_args=(2,), fp32_outs=(0, 1)),
+            covers=("repro/train/engine.py::_packed_exec_fn",)),
+        AuditTarget(
+            name=f"{cfg.name}:train_step.jitted_update",
+            fn=jitted_update(OptimizerConfig(), True),
+            args=(params_a, acc_a, opt_a),
+            contract=Contract(donate=(0, 1, 2), fp32_args=(1,)),
+            covers=("repro/train/train_step.py::jitted_update",)),
+        AuditTarget(
+            name=f"{cfg.name}:train_step.make_train_step",
+            fn=make_train_step(cfg, OptimizerConfig(), impl),
+            args=(params_a, opt_a, abstractify(dict(plan.packed.inputs))),
+            contract=Contract(donate=(0, 1), keep=(2,)),
+            covers=("repro/train/train_step.py::make_train_step",)),
+    ]
+    if plan.partition is not None:
+        targets.extend(_wave_targets(cfg, impl, plan.partition, params_a,
+                                     acc_a, scal_a, scale_a))
+    return targets
+
+
+def _wave_targets(cfg: ModelConfig, impl: str, partition, params_a,
+                  acc_a, scal_a, scale_a) -> list[AuditTarget]:
+    """Replay run_partition_plan's forward sweep entirely under
+    ``jax.eval_shape`` — each wave's gateway/captures stay abstract — and
+    emit one (fwd, bwd) target pair per distinct wave shape signature."""
+    plan = partition
+    st: list[dict] = []          # per wave: {"caps": sds, "gw": sds|None}
+    targets: list[AuditTarget] = []
+    seen: set = set()
+    for w, wp in enumerate(plan.waves):
+        batch_a = abstractify(wp.batch)
+        caps_a = abstractify(wp.capspecs)
+        gw_a = None
+        if wp.has_gw:
+            def mk_gw(prev, _wp=wp, _ba=batch_a):
+                rows_gw = []
+                for ref in _wp.parents:
+                    stp, pwp = prev[ref.wave], plan.waves[ref.wave]
+                    cname = f"c{ref.cut}"
+                    p_gw_row = (None if stp["gw"] is None else
+                                _slice_gw_row(stp["gw"], ref.row,
+                                              pwp.A_real[ref.row]))
+                    caps_view = _cut_caps_view(cfg, stp["caps"], cname,
+                                               ref.row, ref.path_len)
+                    rows_gw.append(
+                        assemble_child_gw(cfg, p_gw_row, caps_view,
+                                          cname))
+                return _stack_gw_rows(rows_gw, _wp.anc_A_max,
+                                      _ba["tokens"].shape[0],
+                                      rows_idx=_wp.slot_rows)
+            gw_a = jax.eval_shape(mk_gw, st)
+        fwd, bwd = _wave_exec_fns(cfg, _names_sig(wp.capspecs), impl,
+                                  wp.has_gw, True)
+        caps_out, _ = jax.eval_shape(fwd, params_a, batch_a, gw_a,
+                                     caps_a, scal_a, scale_a)
+        sig = (wp.has_gw, batch_a["tokens"].shape, wp.anc_A_max,
+               len(wp.capspecs))
+        if sig not in seen:
+            seen.add(sig)
+            tag = f"{cfg.name}:engine.wave{w}" + ("+gw" if wp.has_gw
+                                                  else "")
+            cot_a = (scale_a, caps_out)
+            targets.append(AuditTarget(
+                name=tag + ".fwd", fn=fwd,
+                args=(params_a, batch_a, gw_a, caps_a, scal_a, scale_a),
+                contract=Contract(donate=(4,), keep=(0,),
+                                  fp32_args=(4,), fp32_outs=(1,)),
+                covers=("repro/train/engine.py::_wave_exec_fns",)))
+            targets.append(AuditTarget(
+                name=tag + ".bwd", fn=bwd,
+                args=(params_a, batch_a, gw_a, caps_a, cot_a, acc_a),
+                contract=Contract(donate=(5,), keep=(0,),
+                                  fp32_args=(5,), fp32_outs=(0,)),
+                covers=("repro/train/engine.py::_wave_exec_fns",)))
+        st.append(dict(caps=caps_out, gw=gw_a))
+    return targets
+
+
+def _serve_targets(cfg: ModelConfig, impl: str,
+                   params_a) -> list[AuditTarget]:
+    K, buf = 4, 64
+    enc = cfg.encdec.src_len if cfg.encdec is not None else 0
+    cache1 = jax.eval_shape(lambda: _init_cache(cfg, 1, buf, enc))
+    cacheK = jax.eval_shape(lambda: _init_cache(cfg, K, buf, enc))
+    i32 = jnp.int32
+    targets = [
+        AuditTarget(
+            name=f"{cfg.name}:session.step",
+            fn=_step_exec(cfg, True),
+            args=(params_a, cacheK, _sds((K, 1), i32), _sds((K,), i32),
+                  _sds((), i32)),
+            contract=Contract(donate=(1,), keep=(0,)),
+            covers=("repro/serve/session.py::_step_exec",)),
+        AuditTarget(
+            # snapshot-frozen sessions share buffers: donation forbidden
+            name=f"{cfg.name}:session.step.snapshot",
+            fn=_step_exec(cfg, False),
+            args=(params_a, cacheK, _sds((K, 1), i32), _sds((K,), i32),
+                  _sds((), i32)),
+            contract=Contract(keep=(0, 1)),
+            covers=("repro/serve/session.py::_step_exec",)),
+        AuditTarget(
+            # the parent session must stay steppable after a fork
+            name=f"{cfg.name}:session.fork",
+            fn=_fork_exec(K), args=(cache1,),
+            contract=Contract(keep=(0,)),
+            covers=("repro/serve/session.py::_fork_exec",)),
+        AuditTarget(
+            name=f"{cfg.name}:rollout.decode_scan",
+            fn=_decode_scan(cfg, 4, 1.0),
+            args=(params_a, cacheK, _sds((), i32), _sds((K,), i32),
+                  jax.random.key(0)),
+            contract=Contract(donate=(1,), keep=(0,)),
+            covers=("repro/serve/rollout.py::_decode_scan",)),
+    ]
+    if (cfg.family in ("dense", "moe") and cfg.attn is not None
+            and cfg.attn.window is None and cfg.frontend is None):
+        t0 = P = 16
+        B = 1
+        gs = range(len(layer_groups(cfg)))
+        gw_a = jax.eval_shape(lambda c: {
+            f"g{gi}": {"attn": {"k": c[f"g{gi}"]["k"][:, :, :t0],
+                                "v": c[f"g{gi}"]["v"][:, :, :t0]}}
+            for gi in gs}, cache1)
+        batch_a = dict(tokens=_sds((B, P), i32), pos_ids=_sds((B, P), i32),
+                       kv_last=_sds((B, P), i32),
+                       prev_idx=_sds((B, P), i32),
+                       valid=_sds((B, P), jnp.bool_),
+                       anc_pos=_sds((B, t0), i32),
+                       anc_valid=_sds((B, t0), jnp.bool_))
+        targets.append(AuditTarget(
+            name=f"{cfg.name}:session.prefill",
+            fn=_prefill_exec(cfg, impl),
+            args=(params_a, batch_a, gw_a, _sds((P,), i32)),
+            contract=Contract(keep=(0,)),
+            covers=("repro/serve/session.py::_prefill_exec",)))
+    return targets
+
+
+def build_targets(cfg: ModelConfig, impl: str = "ref"
+                  ) -> list[AuditTarget]:
+    """Every audited entrypoint for one config: the engine's packed/wave
+    executions and optimizer update on a real planned step's shapes, plus
+    the serving session/rollout executables."""
+    params_a = params_abstract(cfg)
+    opt_a = jax.eval_shape(init_opt_state, params_a)
+    _, plan, _, _ = demo_planned_step(cfg)
+    targets = _engine_targets(cfg, impl, plan, params_a, opt_a)
+    targets += _serve_targets(cfg, impl, params_a)
+    return targets
+
+
+# ---------------------------------------------------------------------------
+# jit-site coverage (AST): the registry must stay closed
+# ---------------------------------------------------------------------------
+
+# jit sites that are deliberately NOT audited, each with its reason
+ALLOWED_JIT_SITES = {
+    "repro/core/gateway.py::_part_fns":
+        "legacy B=1 depth-first partition driver (superseded by the "
+        "engine's wave executions; kept for unit-level equivalence tests)",
+    "repro/train/train_step.py::make_grad_fn":
+        "diagnostic gradient probe (launch/rl_loop check_frozen_grads), "
+        "never on the training hot path",
+    "repro/launch/dryrun.py::run_combo":
+        "sharding dry-run tool: AOT-lowers per-combo fns to count "
+        "collectives in the HLO; prints layouts, never a training "
+        "entrypoint",
+}
+
+
+class _JitSiteVisitor(ast.NodeVisitor):
+    def __init__(self, attr: str, roots: tuple):
+        self.attr, self.roots = attr, roots
+        self.stack: list[str] = []
+        self.sites: list[tuple[str, int]] = []
+
+    def _scoped(self, node):
+        self.stack.append(node.name)
+        self.generic_visit(node)
+        self.stack.pop()
+
+    visit_FunctionDef = visit_AsyncFunctionDef = visit_ClassDef = _scoped
+
+    def visit_Call(self, node):
+        f = node.func
+        if (isinstance(f, ast.Attribute) and f.attr == self.attr
+                and isinstance(f.value, ast.Name)
+                and f.value.id in self.roots):
+            self.sites.append((".".join(self.stack) or "<module>",
+                               node.lineno))
+        self.generic_visit(node)
+
+
+def _scan_calls(src_root: str, attr: str, roots: tuple
+                ) -> dict[str, list[tuple[str, int]]]:
+    out: dict[str, list[tuple[str, int]]] = {}
+    for dirpath, _, names in sorted(os.walk(src_root)):
+        for fn in sorted(names):
+            if not fn.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fn)
+            with open(path) as fh:
+                tree = ast.parse(fh.read())
+            v = _JitSiteVisitor(attr, roots)
+            v.visit(tree)
+            if v.sites:
+                rel = os.path.relpath(path, os.path.dirname(src_root))
+                out[rel] = v.sites
+    return out
+
+
+def jit_sites(src_root: str) -> dict[str, list[tuple[str, int]]]:
+    """Every ``jax.jit(...)`` call site under ``src_root`` (the repro
+    package dir), as {relpath: [(qualname, lineno), ...]}."""
+    return _scan_calls(src_root, "jit", ("jax",))
+
+
+def host_transfer_sites(path: str) -> list[tuple[str, int]]:
+    """Device→host transfer call sites in one file: ``np.asarray`` /
+    ``np.array`` / ``jax.device_get`` (``jnp.*`` does not count — it
+    stays on device)."""
+    with open(path) as fh:
+        tree = ast.parse(fh.read())
+    v_np = _JitSiteVisitor("asarray", ("np", "numpy"))
+    v_np.visit(tree)
+    v_arr = _JitSiteVisitor("array", ("np", "numpy"))
+    v_arr.visit(tree)
+    v_get = _JitSiteVisitor("device_get", ("jax",))
+    v_get.visit(tree)
+    return sorted(v_np.sites + v_arr.sites + v_get.sites,
+                  key=lambda s: s[1])
+
+
+def repro_src_root() -> str:
+    # repro is a namespace package (no __init__): anchor on this file
+    return os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def coverage_findings(targets: list[AuditTarget],
+                      src_root: Optional[str] = None) -> list[str]:
+    """Uncovered jit sites: every ``jax.jit`` call under src/repro must be
+    claimed by a built target's ``covers`` or allow-listed with a reason."""
+    src_root = src_root or repro_src_root()
+    covered = {c for t in targets for c in t.covers}
+    covered |= set(ALLOWED_JIT_SITES)
+    missing = []
+    for rel, sites in jit_sites(src_root).items():
+        for qual, line in sites:
+            key = f"{rel}::{qual.split('.')[0]}"
+            full = f"{rel}::{qual}"
+            if key not in covered and full not in covered:
+                missing.append(
+                    f"{rel}:{line} jax.jit in {qual} is neither audited "
+                    f"nor allow-listed — declare an AuditTarget (covers="
+                    f"'{key}') or add it to ALLOWED_JIT_SITES with a "
+                    f"reason")
+    return missing

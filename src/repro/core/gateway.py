@@ -42,7 +42,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.packing import pack_partition_waves
 from repro.core.partition import TreePartition, partition_tree
-from repro.core.plan_cost import pow2
+from repro.core.plan_cost import balanced_row_order, pow2
 from repro.core.tree import TrajectoryTree
 from repro.models.layers import prev_powers
 from repro.models.model import max_conv_taps, needs_chunks
@@ -422,16 +422,29 @@ def _slice_gw_row(gw: dict, r: int, A_real: int) -> dict:
     return out
 
 
-def _stack_gw_rows(rows: list[dict], A_max: int, Bb: int) -> dict:
+def _stack_gw_rows(rows: list[dict], A_max: int, Bb: int,
+                   rows_idx: Optional[list[int]] = None) -> dict:
     """Stack per-row (B=1) gateways along the row axis, front-padding
     token axes (attention ancestors to A_max; conv/shift tails to their
-    wave max) and adding zero rows up to Bb."""
+    wave max) and adding zero rows up to Bb.  ``rows_idx`` scatters entry
+    i to row ``rows_idx[i]`` (the wave's load-balance permutation);
+    omitted, entry i lands at row i."""
+    perm = None
+    if rows_idx is not None and list(rows_idx) != list(range(len(rows))):
+        src = np.full(Bb, -1, np.int64)
+        for i, r in enumerate(rows_idx):
+            src[r] = i
+        pads = iter(range(len(rows), Bb))
+        perm = jnp.asarray([p if p >= 0 else next(pads) for p in src])
+
     def catB(xs):
         x = jnp.concatenate(xs, axis=1)
         if Bb > len(xs):
             z = jnp.zeros((x.shape[0], Bb - len(xs)) + x.shape[2:],
                           x.dtype)
             x = jnp.concatenate([x, z], axis=1)
+        if perm is not None:
+            x = jnp.take(x, perm, axis=1)
         return x
 
     out: dict = {}
@@ -563,9 +576,9 @@ class WavePlan:
     num_rows: int                         # real rows (before pow2 padding)
     parents: list[GatewayRef] = field(default_factory=list)  # per slot
     slot_rows: list[int] = field(default_factory=list)       # slot → row
-    A_real: list[int] = field(default_factory=list)          # per real row
+    A_real: list[int] = field(default_factory=list)          # per row [Bb]
     anc_A_max: int = 0                    # bucketed ancestor length
-    anc_pos_rows: list[np.ndarray] = field(default_factory=list)
+    anc_pos_rows: list[np.ndarray] = field(default_factory=list)  # per row
 
 
 @dataclass
@@ -631,8 +644,9 @@ def build_partition_plan(
                                   for ps in forest for p in ps))
 
     plans: list[WavePlan] = []
+    rowmaps: list[np.ndarray] = []     # per wave: packer row → balanced row
     cells = 0
-    for w, wv in enumerate(waves):
+    for wv in waves:
         B = wv.num_rows
         # bucket in per-replica units: identical to pow2 for power-of-two
         # replica counts, but never inflates past ~the max_rows budget the
@@ -676,28 +690,27 @@ def build_partition_plan(
         # back once a too-wide depth level is split under max_rows
         has_gw = forest[wv.slots[0].tree][wv.slots[0].pid].parent_pid >= 0
         parents: list[GatewayRef] = []
-        A_real: list[int] = []
         A_max = 0
         anc_pos_rows: list[np.ndarray] = \
-            [np.zeros((0,), np.int32) for _ in range(B)]
+            [np.zeros((0,), np.int32) for _ in range(Bb)]
         if has_gw:
-            anc_pos_rows = []
+            # wave ≥ 1: one fragment per row, slot i at packer row i
             for sl in wv.slots:
                 wp, ci = cut_of_child[(sl.tree, sl.pid)]
                 c = waves[wp].cuts[ci]
-                parents.append(GatewayRef(wave=wp, cut=ci, row=c.row,
+                prow = int(rowmaps[wp][c.row])
+                parents.append(GatewayRef(wave=wp, cut=ci, row=prow,
                                           path_len=len(c.path_idx)))
-                anc_pos_rows.append(np.concatenate(
-                    [plans[wp].anc_pos_rows[c.row],
+                anc_pos_rows[sl.row] = np.concatenate(
+                    [plans[wp].anc_pos_rows[prow],
                      waves[wp].arrays["pos_ids"][c.row, c.path_idx]]
-                ).astype(np.int32))
-                assert len(anc_pos_rows[-1]) == \
+                ).astype(np.int32)
+                assert len(anc_pos_rows[sl.row]) == \
                     forest[sl.tree][sl.pid].anc_len
-            A_real = [len(p) for p in anc_pos_rows]
             # lo=8: ancestor buckets stay TPU-sublane-aligned so the fused
             # pallas kernels get an MXU-friendly front-padded KV extension
             # (the chunked path is indifferent; padded slots are masked)
-            A_max = _pow2(max(A_real), lo=8)
+            A_max = _pow2(max(len(p) for p in anc_pos_rows), lo=8)
             anc_pos = np.zeros((Bb, A_max), np.int32)
             anc_valid = np.zeros((Bb, A_max), bool)
             for r, p in enumerate(anc_pos_rows):
@@ -706,10 +719,28 @@ def build_partition_plan(
             batch["anc_pos"] = anc_pos
             batch["anc_valid"] = anc_valid
 
+        # wave-level replica balance: permute rows by gateway + token
+        # load the way packed rows are snake-dealt (train/planner), so
+        # contiguous per-replica shards carry non-empty-row counts within
+        # 1 of each other.  Pure row permutation — identity when
+        # row_multiple ≤ 1, and gradient-neutral always (row metadata is
+        # row-local; the gateway topology is remapped alongside).
+        loads = [int(batch["valid"][r].sum()) + len(anc_pos_rows[r])
+                 for r in range(Bb)]
+        order = balanced_row_order(loads, row_multiple)
+        new_of = np.empty(Bb, np.int64)
+        new_of[np.asarray(order)] = np.arange(Bb)
+        if order != list(range(Bb)):
+            batch = {k: v[np.asarray(order)] for k, v in batch.items()}
+            anc_pos_rows = [anc_pos_rows[r] for r in order]
+        rowmaps.append(new_of)
+
         plans.append(WavePlan(batch=batch, capspecs=capspecs,
                               has_gw=has_gw, num_rows=B, parents=parents,
-                              slot_rows=[sl.row for sl in wv.slots],
-                              A_real=A_real, anc_A_max=A_max,
+                              slot_rows=[int(new_of[sl.row])
+                                         for sl in wv.slots],
+                              A_real=[len(p) for p in anc_pos_rows],
+                              anc_A_max=A_max,
                               anc_pos_rows=anc_pos_rows))
 
     info["cells"] = cells     # materialized row cells (bucketed rows × S)

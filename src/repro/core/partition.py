@@ -227,7 +227,7 @@ def partition_tree(
             ))
 
         # recurse into children partitions (DFS): anc_len grows by the path
-        for cp, (anc_node, child) in zip(part.cuts, cut_children):
+        for cp, (_anc, child) in zip(part.cuts, cut_children):
             cp.child_pid = len(parts)
             build(child, pid, anc_len + len(cp.path_token_idx))
 

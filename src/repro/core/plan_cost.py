@@ -113,6 +113,17 @@ def packed_signature(n_rows: int, seq_len: int) -> Hashable:
     return ("packed", n_rows, seq_len)
 
 
+def wave_signature(n_rows: int, seq_len: int, anc: int, n_cuts: int,
+                   path_len: int, n_extra: int) -> Hashable:
+    """Jit signature of one partition wave: bucketed rows × ancestor
+    length × cut count × capture-path length × boundary-extra count.
+    Mirrors exactly what keys ``train/engine._wave_exec_fns`` retraces —
+    the wave half of the compile-cache model (ROADMAP item 4) and the
+    shape the analysis layer (``repro.analysis.signatures``) audits
+    against the pow2 bucket universe."""
+    return ("wave", n_rows, seq_len, anc, n_cuts, path_len, n_extra)
+
+
 @dataclass(frozen=True)
 class CostWeights:
     """All weights are token-cells per unit of the component."""

@@ -173,7 +173,8 @@ def main() -> None:
             p2 = jax.tree.map(jnp.copy, params)
             o2 = jax.tree.map(jnp.copy, opt_state)
             for _ in range(2):
-                p2, o2, _ = weng.step(p2, o2, wsteps[0].execution_plan())
+                p2, o2 = weng.warmup(p2, o2, wsteps[0].execution_plan())
+            assert weng.host_syncs == 0, "warmup must not sync"
             # updated params can carry different buffer layouts than the
             # init ones — warm the rollout executables for that variant
             # too, or the generator recompiles mid-loop

@@ -122,7 +122,8 @@ def analytic_hbm_bytes(cfg, shape, chips: int) -> float:
 def load_results(results_dir: str, mesh: str = "single") -> list[dict]:
     out = []
     for f in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
-        r = json.load(open(f))
+        with open(f) as fh:
+            r = json.load(fh)
         if r.get("mesh") == mesh and r.get("status") == "ok":
             out.append(r)
     return out

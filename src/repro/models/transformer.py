@@ -234,7 +234,8 @@ def init_params(cfg: ModelConfig, key) -> dict:
     stacks = []
     for (kind, n), gk in zip(groups, gkeys):
         lkeys = jax.random.split(gk, n)
-        stacked = jax.vmap(lambda k: _init_layer(cfg, k, kind))(lkeys)
+        stacked = jax.vmap(
+            lambda k, kind=kind: _init_layer(cfg, k, kind))(lkeys)
         stacks.append(stacked)
     params["layer_stacks"] = stacks
 

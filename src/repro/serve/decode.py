@@ -264,7 +264,7 @@ def _decode_step(cfg: ModelConfig, params: dict, cache: dict,
                 zip(groups, params["layer_stacks"])):
             cross_l = cache.get("cross") if kind == "decoder_cross" else None
 
-            def body(xc, inp):
+            def body(xc, inp, kind=kind, cross_l=cross_l):
                 if cross_l is not None:
                     lp, cl, cx = inp
                 else:

@@ -78,7 +78,14 @@ def _decode_scan(cfg: ModelConfig, steps: int, temperature: float):
     from repro.serve.decode import _decode_step
 
     def run(params, cache, t0, tok0, key):
-        ring = cache["g0"]["pos"].shape[2] if "g0" in cache else 1
+        # KV ring length, robust to cache layout (hybrid/SSM groups may
+        # carry no "pos"; pure-SSM caches have no ring at all) — mirrors
+        # DecodeSession._ring
+        ring = 1
+        for grp in cache.values():
+            if isinstance(grp, dict) and "pos" in grp:
+                ring = grp["pos"].shape[2]
+                break
         K = tok0.shape[0]
 
         def body(carry, i):
@@ -96,7 +103,10 @@ def _decode_scan(cfg: ModelConfig, steps: int, temperature: float):
         # final carry holds generated token steps−1
         return jnp.concatenate([toks, tok[None]], axis=0), cache
 
-    return jax.jit(run)
+    # the cache (arg 1) is a fork's freshly tiled buffers and the caller
+    # reassigns ``branches.cache`` to the scan's output — donating it lets
+    # XLA run the whole decode loop in-place in one cache's worth of HBM
+    return jax.jit(run, donate_argnums=(1,))
 
 
 def default_reward(seq: np.ndarray, prompt_len: int) -> float:

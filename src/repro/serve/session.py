@@ -45,9 +45,36 @@ from repro.sharding import shard_logits
 
 
 @lru_cache(maxsize=32)
-def _step_exec(cfg: ModelConfig):
-    return jax.jit(lambda p, c, t, pos, w: _decode_step(cfg, p, c, t,
-                                                        pos, w))
+def _step_exec(cfg: ModelConfig, donate: bool = True):
+    """One decode step.  The cache (arg 1) is donated by default — the
+    step's output cache recycles the input buffers instead of holding
+    both alive — except for sessions whose buffers are shared with a
+    ``snapshot`` (``DecodeSession.donate`` gates it per session)."""
+    f = lambda p, c, t, pos, w: _decode_step(cfg, p, c, t, pos, w)
+    return jax.jit(f, donate_argnums=(1,) if donate else ())
+
+
+@lru_cache(maxsize=8)
+def _fork_exec(k: int):
+    """Tile every cache row ``k``× in ONE jitted dispatch (fork used to
+    issue one ``jnp.repeat`` per leaf).  The parent's cache (arg 0) is
+    deliberately NOT donated: the parent session stays steppable after
+    the fork — a contract the static auditor (repro.analysis) checks."""
+    def tile(cache):
+        out = {}
+        for name, grp in cache.items():
+            if name == "cross":
+                # cross "valid" is [B, enc] (batch axis 0); k/v are
+                # [L, B, enc, ...] like every other leaf
+                out[name] = {kk: jnp.repeat(vv, k, axis=0
+                                            if kk == "valid" else 1)
+                             for kk, vv in grp.items()}
+            else:
+                out[name] = jax.tree.map(
+                    lambda a: jnp.repeat(a, k, axis=1), grp)
+        return out
+
+    return jax.jit(tile)
 
 
 @lru_cache(maxsize=32)
@@ -84,6 +111,9 @@ class DecodeSession:
     t: int = 0                        # next absolute position
     enc_len: int = 0
     stats: SessionStats = field(default_factory=SessionStats)
+    # step() may donate the cache back to XLA (in-place buffer reuse)
+    # unless a live snapshot shares these buffers — snapshot() clears it.
+    donate: bool = True
 
     # -- construction ------------------------------------------------------
     @classmethod
@@ -200,26 +230,19 @@ class DecodeSession:
         (identical rows; a production server would alias one copy).  Only
         1-branch sessions fork; the forks share this session's stats."""
         assert self.batch == 1, "fork() requires a 1-branch session"
-
-        def tile(a, axis):
-            return jnp.repeat(a, k, axis=axis)
-
-        new_cache = {}
-        for name, grp in self.cache.items():
-            if name == "cross":
-                # cross "valid" is [B, enc] (batch axis 0); k/v are
-                # [L, B, enc, ...] like every other leaf
-                new_cache[name] = {kk: tile(vv, 0 if kk == "valid" else 1)
-                                   for kk, vv in grp.items()}
-            else:
-                new_cache[name] = jax.tree.map(lambda a: tile(a, 1), grp)
-        return replace(self, cache=new_cache, batch=k)
+        new_cache = _fork_exec(k)(self.cache)
+        # the fork's cache rows are fresh buffers, so it may donate them
+        # on step() even if this parent is snapshot-frozen
+        return replace(self, cache=new_cache, batch=k, donate=True)
 
     def snapshot(self) -> "DecodeSession":
         """O(1) capture of the current state: an independent session that
         can be stepped separately (caches are immutable device arrays).
         Shares the group's stats — compute on abandoned branches still
         counts."""
+        # both sessions now alias the same cache buffers: neither may let
+        # XLA donate (overwrite) them on step()
+        self.donate = False
         return replace(self)
 
     # -- decode ------------------------------------------------------------
@@ -227,7 +250,7 @@ class DecodeSession:
         ring = self._ring
         widx = jnp.asarray(self.t % ring if ring else 0, jnp.int32)
         pos = jnp.full((self.batch,), self.t, jnp.int32)
-        logits, self.cache = _step_exec(self.cfg)(
+        logits, self.cache = _step_exec(self.cfg, self.donate)(
             self.params, self.cache, tokens.reshape(self.batch, 1),
             pos, widx)
         self.t += 1

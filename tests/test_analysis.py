@@ -1,0 +1,216 @@
+"""treelint self-tests: every pass must catch its seeded violation and
+stay silent on the real, proven-clean code paths."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from conftest import tiny_cfg
+
+from repro.analysis.jaxpr_audit import audit_all, audit_target
+from repro.analysis.registry import (AuditTarget, Contract,
+                                     audit_loader_config, build_targets,
+                                     coverage_findings,
+                                     host_transfer_sites, repro_src_root)
+
+jax.config.update("jax_platforms", "cpu")
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _target(fn, args, contract, name="seeded"):
+    return AuditTarget(name=name, fn=fn, args=args, contract=contract)
+
+
+# ---------------------------------------------------------------------------
+# jaxpr audit: seeded violations
+# ---------------------------------------------------------------------------
+
+def test_seeded_callback_flagged():
+    def noisy(x):
+        jax.debug.callback(lambda v: None, x)
+        return x * 2
+
+    fn = jax.jit(noisy)
+    args = (_sds((4,)),)
+    found = audit_target(_target(fn, args, Contract()))
+    assert [f.check for f in found] == ["callback"]
+    # ...and an explicit allowance silences it
+    assert audit_target(_target(fn, args, Contract(max_callbacks=1))) == []
+
+
+def test_seeded_missing_donation_flagged():
+    def f(acc, g):
+        return acc + g, g * 2
+
+    args = (_sds((8,)), _sds((8,)))
+    undonated = jax.jit(f)
+    found = audit_target(_target(undonated, args, Contract(donate=(0,))))
+    assert [f.check for f in found] == ["donation"]
+    assert "must be donated" in found[0].message
+
+    donated = jax.jit(f, donate_argnums=(0,))
+    assert audit_target(_target(donated, args,
+                                Contract(donate=(0,), keep=(1,)))) == []
+    # donating a buffer the contract says must stay live is also flagged
+    wrong = jax.jit(f, donate_argnums=(1,))
+    found = audit_target(_target(wrong, args, Contract(keep=(1,))))
+    assert [f.check for f in found] == ["donation"]
+    assert "must NOT be donated" in found[0].message
+
+
+def test_seeded_bf16_accumulator_arg_flagged():
+    fn = jax.jit(lambda a: a * 2)
+    found = audit_target(_target(fn, (_sds((8,), jnp.bfloat16),),
+                                 Contract(fp32_args=(0,))))
+    assert [f.check for f in found] == ["dtype"]
+    assert "bfloat16" in found[0].message
+
+
+def test_seeded_low_precision_sum_upcast_flagged():
+    # the violation: reduce in bf16, convert the SUM to fp32 at the output
+    bad = jax.jit(lambda g: g.sum().astype(jnp.float32))
+    found = audit_target(_target(bad, (_sds((64,), jnp.bfloat16),),
+                                 Contract(fp32_outs=(0,))))
+    assert found and all(f.check == "dtype" for f in found)
+    assert any("upcasting" in f.message for f in found)
+
+    # the sanctioned dtype policy: upcast each ADDEND, accumulate in fp32
+    good = jax.jit(lambda acc, g: acc + g.astype(jnp.float32))
+    assert audit_target(_target(
+        good, (_sds((8,)), _sds((8,), jnp.bfloat16)),
+        Contract(fp32_outs=(0,)))) == []
+
+
+def test_seeded_bf16_output_flagged():
+    bad = jax.jit(lambda a, b: a + b)
+    args = (_sds((4,), jnp.bfloat16), _sds((4,), jnp.bfloat16))
+    found = audit_target(_target(bad, args, Contract(fp32_outs=(0,))))
+    assert [f.check for f in found] == ["dtype"]
+    assert "must be fp32" in found[0].message
+
+
+# ---------------------------------------------------------------------------
+# mask soundness: a broken predicate is caught, the real one is clean
+# ---------------------------------------------------------------------------
+
+def test_mask_check_catches_unsound_predicate():
+    from repro.analysis.mask_check import check_predicate
+
+    def strict_live(q_start, q_end, kv_start, block_max,
+                    qp_min=None, kp_max=None, window=None):
+        # seeded bug: strict > wrongly skips blocks with block_max ==
+        # q_start, which still hold the visible pair (i=q_start, j≤i)
+        live = (kv_start <= q_end) & (block_max > q_start)
+        if window is not None:
+            live = live & ((qp_min - kp_max) < window)
+        return live
+
+    buckets = [(32, 32, 0, None), (32, 32, 8, 63)]
+    found, _ = check_predicate(strict_live, buckets=buckets)
+    assert found and all(f.check == "mask" for f in found)
+    assert "UNSOUND" in found[0].message
+
+
+def test_mask_check_real_predicate_clean():
+    from repro.analysis.mask_check import (check_bwd_shares_predicate,
+                                           check_predicate,
+                                           empirical_mask_check)
+    found, rep = check_predicate(fast=True)
+    assert found == []
+    assert rep["unsound_skips"] == 0
+    assert 0.0 < rep["proven_skip_rate"] < 1.0
+    assert check_bwd_shares_predicate() == []
+    emp_f, emp_rep = empirical_mask_check(seeds=range(2))
+    assert emp_f == []
+    assert emp_rep["proven_skip_rate"] > 0.0
+
+
+# ---------------------------------------------------------------------------
+# signature lint: out-of-universe shapes rejected, a real run is clean
+# ---------------------------------------------------------------------------
+
+def test_signature_universe_rejects_unbucketed_shapes():
+    from repro.analysis.signatures import SignatureUniverse
+    from repro.core.plan_cost import packed_signature, wave_signature
+
+    u = SignatureUniverse(seq_len=64, batch_rows=3, num_replicas=2,
+                          max_rows=3, capacity=48)
+    ok, _ = u.contains(packed_signature(u.packed_rows, 64))
+    assert ok
+    ok, why = u.contains(packed_signature(5, 64))
+    assert not ok and "replica-rounded" in why
+    ok, _ = u.contains(wave_signature(2, 64, 8, 2, 16, 0))
+    assert ok
+    ok, why = u.contains(wave_signature(6, 64, 8, 2, 16, 0))
+    assert not ok and "pow2 multiple" in why        # 6 = 2 replicas × 3
+    ok, why = u.contains(wave_signature(2, 64, 12, 2, 16, 0))
+    assert not ok and "ancestor pad" in why
+    ok, why = u.contains(wave_signature(2, 64, 8, 3, 16, 0))
+    assert not ok and "cut count" in why
+    assert u.count(8, 2, 16, 0) >= 4
+
+
+def test_signature_lint_real_planner_run_clean():
+    from repro.analysis.signatures import lint_signatures, synthetic_source
+    from repro.train.planner import PlannerConfig
+
+    cfg = tiny_cfg("dense")
+    lc = audit_loader_config(cfg)
+    pc = PlannerConfig(lookahead=2, num_replicas=2)
+    src = synthetic_source(cfg, n_batches=4, trees_per=lc.trees_per_batch)
+    found, rep = lint_signatures(cfg, lc, pc, src)
+    assert found == []
+    assert rep["out_of_universe"] == 0
+    assert rep["steps"] > 0 and rep["signatures_emitted"] > 0
+    assert rep["aot_universe_size"] >= rep["signatures_distinct"]
+
+
+# ---------------------------------------------------------------------------
+# AST passes: host-sync funnel + closed jit-site coverage
+# ---------------------------------------------------------------------------
+
+def test_engine_host_transfer_funnel():
+    path = os.path.join(repro_src_root(), "train", "engine.py")
+    assert [q for q, _ in host_transfer_sites(path)] == \
+        ["TreeTrainEngine._sync"]
+    from repro.analysis.lint import _engine_host_transfer_findings
+    assert _engine_host_transfer_findings() == []
+
+
+def test_host_transfer_ast_detects_sites(tmp_path):
+    src = tmp_path / "m.py"
+    src.write_text(
+        "import numpy as np\nimport jax\n"
+        "def pull(x):\n    return np.asarray(x)\n"
+        "class C:\n    def get(self, x):\n"
+        "        return jax.device_get(x)\n")
+    quals = [q for q, _ in host_transfer_sites(str(src))]
+    assert quals == ["pull", "C.get"]
+
+
+def test_coverage_is_closed(tmp_path):
+    pkg = tmp_path / "pkg"
+    pkg.mkdir()
+    (pkg / "mod.py").write_text(
+        "import jax\nstep = jax.jit(lambda x: x + 1)\n")
+    missing = coverage_findings([], src_root=str(pkg))
+    assert len(missing) == 1 and "neither audited" in missing[0]
+    claimed = AuditTarget(name="t", fn=None, args=(), contract=Contract(),
+                          covers=("pkg/mod.py::<module>",))
+    assert coverage_findings([claimed], src_root=str(pkg)) == []
+
+
+# ---------------------------------------------------------------------------
+# registry smoke: the real dense entrypoints audit clean (no false
+# positives from the ref-impl oracle) and close the coverage set
+# ---------------------------------------------------------------------------
+
+def test_registry_dense_targets_audit_clean():
+    cfg = tiny_cfg("dense")
+    targets = build_targets(cfg, impl="ref")
+    assert len(targets) >= 8
+    assert audit_all(targets) == []
+    assert coverage_findings(targets) == []

@@ -67,7 +67,7 @@ def test_arch_smoke_decode(arch):
     B, T = 2, 8
     sess = DecodeSession.create(cfg, params, batch=B, buf_len=T)
     rng = np.random.default_rng(0)
-    for t in range(3):
+    for _ in range(3):
         toks = rng.integers(0, cfg.vocab_size, B).astype(np.int32)
         logits = sess.step(toks)
         assert logits.shape == (B, cfg.padded_vocab)

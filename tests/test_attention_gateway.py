@@ -69,7 +69,7 @@ def test_impls_agree_on_gateway_path(window, A):
     for impl in ("ref", "chunked", "pallas"):
         outs[impl] = run(impl, x, extra["k"], extra["v"])
         grads[impl] = jax.grad(
-            lambda *a: (run(impl, *a) ** 2).sum(),
+            lambda *a, impl=impl: (run(impl, *a) ** 2).sum(),
             argnums=(0, 1, 2))(x, extra["k"], extra["v"])
     for impl in ("chunked", "pallas"):
         np.testing.assert_allclose(np.asarray(outs[impl]),

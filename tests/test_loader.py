@@ -135,7 +135,7 @@ def test_auto_partition_drops_nothing():
     steps = 6
     gen_tokens = kept_tokens = 0
     n_oversized = n_packed = 0
-    for b, sb in enumerate(_step_batches(cfg, lc, steps)):
+    for sb in _step_batches(cfg, lc, steps):
         assert sb.dropped == 0
         n_oversized += len(sb.oversized)
         if sb.tb is not None:

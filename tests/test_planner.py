@@ -121,7 +121,19 @@ def _check_window_invariants(cfg, lc, pc, window):
                     # parents never scheduled later than children
                     assert ref.wave < w
                 # wave rows shard evenly too
-                assert wp.batch["tokens"].shape[0] % max(R, 1) == 0
+                Bb = wp.batch["tokens"].shape[0]
+                assert Bb % max(R, 1) == 0
+                if R > 1:
+                    # wave-level load balance: rows are permuted by
+                    # gateway + token load (snake-dealt like packed
+                    # rows), so contiguous per-replica shards carry
+                    # non-empty-row counts within 1 of each other
+                    per = Bb // R
+                    loads = [int(wp.batch["valid"][r].sum())
+                             + wp.A_real[r] for r in range(Bb)]
+                    nz = [sum(ld > 0 for ld in loads[i * per:(i + 1) * per])
+                          for i in range(R)]
+                    assert max(nz) - min(nz) <= 1, (w, loads, nz)
     assert seen_trees + dropped == gen_trees
     if lc.mode != "tree":
         return          # baseline packs replicated path tokens, not unique

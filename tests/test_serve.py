@@ -102,7 +102,7 @@ def test_audio_encdec_decode():
     n_dec = cfg.encdec.dec_layers
     ks, vs = [], []
     for l in range(n_dec):
-        lp = jax.tree.map(lambda a: a[l], dec_stack)
+        lp = jax.tree.map(lambda a, l=l: a[l], dec_stack)
         k, v = project_cross_kv(lp["xattn"], cfg.attn, enc_out)
         ks.append(k)
         vs.append(v)

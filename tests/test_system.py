@@ -31,7 +31,7 @@ def test_end_to_end_tree_training_runs_and_learns():
                       gen_kwargs=dict(num_turns=3,
                                       turn_len_range=(4, 16)))
     losses = []
-    for inputs, tb in batches(cfg, lc, 15):
+    for inputs, _tb in batches(cfg, lc, 15):
         params, opt, m = step(params, opt, inputs)
         losses.append(float(m["token_nll_mean"]))
     assert len(losses) >= 10
