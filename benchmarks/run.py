@@ -686,6 +686,46 @@ def bench_smoke_model(impl: str) -> None:
          f"loss_rel={abs(float(l_tree - l_base)) / abs(float(l_base)):.1e}")
 
 
+# ---------------------------------------------------------------------------
+# shardlint byte table — audited per-step collective wire bytes
+# ---------------------------------------------------------------------------
+
+def bench_comms_table() -> None:
+    """shardlint's fast host-mesh audit (``lint --comms --fast``) in a
+    subprocess — fake devices need ``XLA_FLAGS`` set before jax
+    initializes, which this already-imported process cannot redo.  Emits
+    the audited engine-step wire bytes from the ``comms.json`` table (the
+    number ``plan_cost.wire_bytes_per_step`` feeds the cost model)."""
+    import subprocess
+    import tempfile
+
+    from repro.core.plan_cost import wire_bytes_per_step
+    fd, out = tempfile.mkstemp(suffix=".json")
+    os.close(fd)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.setdefault("TF_CPP_MIN_LOG_LEVEL", "3")
+    env.pop("XLA_FLAGS", None)     # the audit sets its own fake devices
+    t0 = time.perf_counter()
+    r = subprocess.run([sys.executable, "-m", "repro.analysis.lint",
+                        "--comms", "--fast", "-q", "--out", out],
+                       env=env, capture_output=True, text=True,
+                       timeout=600)
+    us = (time.perf_counter() - t0) * 1e6
+    if r.returncode != 0:
+        emit("comms_table", us, "shardlint=FAILED")
+        return
+    with open(out) as fh:
+        rep = json.load(fh)
+    os.unlink(out)
+    mesh, entry = next(iter(rep["meshes"].items()))
+    wb = wire_bytes_per_step(entry["engine.packed"])
+    dec = wire_bytes_per_step(entry["session.step"])
+    emit("comms_table", us,
+         f"mesh={mesh} engine_step_wire_bytes={wb} "
+         f"decode_step_wire_bytes={dec} findings=0")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -712,6 +752,7 @@ def main(argv=None) -> None:
         bench_engine_step(smoke=True, impl=args.impl)
         bench_plan_efficiency(smoke=True, impl=args.impl)
         bench_rl_service(smoke=True, impl=args.impl)
+        bench_comms_table()
     else:
         bench_por_sweep(args.impl)
         bench_partition_tokens()
@@ -725,6 +766,7 @@ def main(argv=None) -> None:
         bench_engine_step(impl=args.impl)
         bench_plan_efficiency(impl=args.impl)
         bench_rl_service(impl=args.impl)
+        bench_comms_table()
     if args.out:
         artifact = {
             "smoke": args.smoke,

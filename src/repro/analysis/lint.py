@@ -15,9 +15,18 @@ Runs every static pass and exits non-zero on any finding:
   5. mask soundness — the Pallas block-skip predicate over the bucketed
      boundary universe + packed random trees (``mask_check``).
 
+``--comms`` instead runs shardlint (treelint passes 4–6): the abstract-
+mesh SPMD & collective-comms audit (``comms_audit`` — CommContract
+checks, sharding-rule/propagation lint) plus the lock-discipline AST
+lint (``lock_lint``).  It needs fake devices, so this module sets
+``--xla_force_host_platform_device_count`` in ``main()`` before any jax
+import — module-level imports here must stay stdlib-only.  ``--out``
+writes the ``comms.json`` artifact (nightly uploads it).
+
 ``--fast`` restricts to two smoke archs and the small mask universe
-(< 2 min, the CI fast gate); the full sweep runs nightly and writes the
-``treelint.json`` artifact via ``--out``.
+(< 2 min, the CI fast gate); with ``--comms`` it audits the host mesh
+on the dense config only (< 15 s).  The full sweeps run nightly and
+write the ``treelint.json`` / ``comms.json`` artifacts via ``--out``.
 """
 from __future__ import annotations
 
@@ -126,6 +135,9 @@ def main(argv=None) -> int:
     ap.add_argument("--fast", action="store_true",
                     help="CI fast gate: two smoke archs, small mask "
                          "universe")
+    ap.add_argument("--comms", action="store_true",
+                    help="shardlint (passes 4-6): abstract-mesh comms "
+                         "audit + sharding lint + lock lint")
     ap.add_argument("--arch", action="append", default=None,
                     help="audit this arch (repeatable; default: fast "
                          "pair or all)")
@@ -136,6 +148,32 @@ def main(argv=None) -> int:
                     help="write the JSON report here (treelint.json)")
     ap.add_argument("-q", "--quiet", action="store_true")
     args = ap.parse_args(argv)
+
+    if args.comms:
+        # fake devices must exist before jax initializes: 16 covers the
+        # fast host mesh, 512 the (2,16,16) production descriptor
+        import os
+        n = 16 if args.fast else 512
+        if "xla_force_host_platform_device_count" not in os.environ.get(
+                "XLA_FLAGS", ""):
+            os.environ["XLA_FLAGS"] = (
+                os.environ.get("XLA_FLAGS", "")
+                + f" --xla_force_host_platform_device_count={n}")
+        from repro.analysis.comms_audit import run_comms_lint
+        t0 = time.perf_counter()
+        findings, report = run_comms_lint(fast=args.fast, impl=args.impl,
+                                          verbose=not args.quiet)
+        report["total_seconds"] = round(time.perf_counter() - t0, 2)
+        if args.out:
+            with open(args.out, "w") as fh:
+                json.dump(report, fh, indent=2, sort_keys=True)
+        for f in findings:
+            print(f"FINDING {f}", file=sys.stderr)
+        if not args.quiet:
+            print(f"[shardlint] {'FAILED' if findings else 'OK'}: "
+                  f"{len(findings)} findings in "
+                  f"{report['total_seconds']}s")
+        return 1 if findings else 0
 
     if args.arch:
         archs = args.arch

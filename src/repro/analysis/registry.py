@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import ast
 import os
+import re
 from dataclasses import dataclass, field
 from typing import Any, Optional
 
@@ -67,6 +68,100 @@ class AuditTarget:
     contract: Contract
     covers: tuple = ()
     notes: list = field(default_factory=list)
+
+
+@dataclass(frozen=True)
+class CommContract:
+    """What collectives an entrypoint's post-SPMD lowering may carry under
+    the production meshes — checked by shardlint (pass 4,
+    ``analysis/comms_audit``).  Every registered entrypoint must match a
+    ``COMM_CONTRACTS`` pattern or be listed in ``COMM_ALLOWED`` with a
+    reason; otherwise lint fails (closed coverage, like the jaxpr pass).
+
+    ``grad_psum``: the lowering must reduce each fp32 gradient element
+    over the data axes exactly once (total non-scalar data-axis fp32
+    all-reduce elements == grad element count — a missing psum trains on
+    per-replica grads, a doubled one silently scales the LR).
+    ``no_param_allgather_fwd``: no forward all-gather materializing a
+    full parameter (the FSDP regression shardlint exists to catch).
+    ``zero_data_axis_collectives``: decode-style entrypoints may not
+    communicate over the data axes at all — replicas serve independent
+    rows.  ``seq_parallel_boundary``: with ``seq_parallel=True`` the
+    block-boundary forward reduction must lower as a true reduce-scatter
+    with strictly fewer forward wire bytes than the all-reduce baseline
+    (the ``sharding.use_mesh`` docstring claim)."""
+    grad_psum: bool = False
+    no_param_allgather_fwd: bool = False
+    zero_data_axis_collectives: bool = False
+    seq_parallel_boundary: bool = False
+    note: str = ""
+
+
+# (regex over the target name after "<arch>:", contract); first match wins.
+COMM_CONTRACTS: list[tuple[str, CommContract]] = [
+    (r"^engine\.packed\+acc$", CommContract(
+        grad_psum=True, no_param_allgather_fwd=True,
+        seq_parallel_boundary=True,
+        note="THE training step: one fp32 grad psum over data, params "
+             "stay resident (no fwd all-gather), SP boundary audited")),
+    (r"^engine\.packed$", CommContract(
+        grad_psum=True, no_param_allgather_fwd=True,
+        note="no-accumulator variant of engine.packed+acc")),
+    (r"^engine\.wave\d+(\+gw)?\.fwd$", CommContract(
+        no_param_allgather_fwd=True,
+        note="partition-wave forward: same TP collectives as the packed "
+             "forward; gateway tensors are activations, not params")),
+    (r"^engine\.wave\d+(\+gw)?\.bwd$", CommContract(
+        grad_psum=True,
+        note="per-wave grads psum over data exactly like the packed bwd "
+             "(GSPMD reduces sharded-batch grads onto replicated params)")),
+    (r"^train_step\.jitted_update$", CommContract(
+        note="elementwise optimizer on already-reduced fp32 grads; "
+             "model-axis psum for the global grad-norm scalar only")),
+    (r"^train_step\.make_train_step$", CommContract(
+        grad_psum=True,
+        note="legacy fused step: grad psum inside, then elementwise")),
+    (r"^session\.step(\.snapshot)?$", CommContract(
+        zero_data_axis_collectives=True,
+        note="decode replicas own disjoint cache rows — any data-axis "
+             "collective here serializes every serving step")),
+    (r"^session\.fork$", CommContract(
+        zero_data_axis_collectives=True,
+        note="pure cache tiling, no cross-replica math")),
+    (r"^rollout\.decode_scan$", CommContract(
+        zero_data_axis_collectives=True,
+        note="scanned session.step + on-device sampling")),
+    (r"^session\.prefill$", CommContract(
+        note="B=1 prefill replicates the batch; model-axis TP "
+             "collectives only — no data-axis contract until multi-row "
+             "serving lands")),
+]
+
+# entrypoints deliberately carrying NO comm contract, with the reason
+COMM_ALLOWED: dict[str, str] = {}
+
+
+def comm_contract_for(name: str) -> Optional[CommContract]:
+    """The CommContract for a target name (``<arch>:<entrypoint>``)."""
+    tail = name.split(":", 1)[-1]
+    for pat, c in COMM_CONTRACTS:
+        if re.search(pat, tail):
+            return c
+    return None
+
+
+def comm_coverage_findings(targets: list["AuditTarget"]) -> list[str]:
+    """Closed coverage for pass 4: every registered entrypoint declares a
+    CommContract or an allow-list reason."""
+    missing = []
+    for t in targets:
+        tail = t.name.split(":", 1)[-1]
+        if comm_contract_for(t.name) is None and tail not in COMM_ALLOWED:
+            missing.append(
+                f"{t.name} has no CommContract — declare one in "
+                f"COMM_CONTRACTS (or add '{tail}' to COMM_ALLOWED with a "
+                f"reason) so its collective behavior is pinned")
+    return missing
 
 
 # ---------------------------------------------------------------------------

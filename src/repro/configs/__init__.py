@@ -33,6 +33,20 @@ ARCH_IDS = [
 
 ASSIGNED_IDS = ARCH_IDS[:10]
 
+# shardlint's lowering sweep (analysis/comms_audit): one representative
+# per family plus the production-scale configs no single host can run —
+# those are statically verified under the fake-device production mesh.
+SHARDLINT_SWEEP_ARCHS = (
+    "qwen1p5_0p5b",           # dense
+    "qwen3_30b_a3b",          # moe (paper table)
+    "rwkv6_1p6b",             # ssm
+    "zamba2_1p2b",            # hybrid
+    "phi3_vision_4p2b",       # vlm
+    "seamless_m4t_large_v2",  # audio
+    "kimi_k2_1t_a32b",        # 1T MoE — production scale
+    "nemotron_4_340b",        # 340B dense — production scale
+)
+
 
 def _canon(arch: str) -> str:
     return arch.replace("-", "_").replace(".", "p")

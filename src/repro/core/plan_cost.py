@@ -25,7 +25,15 @@ row) so they add meaningfully:
                      rows×tri(S/b).  Packing many small trees into a row
                      keeps blocks near the diagonal and raises the skip
                      fraction; one long tree lights up its whole
-                     lower-triangle.
+                     lower-triangle;
+  comm bytes         audited per-step collective wire bytes (shardlint's
+                     ``comms.json`` byte table → ``wire_bytes_per_step``)
+                     converted at ``comm_byte`` token-cells per byte.
+                     Default weight 0.0: the packed step's collective
+                     traffic is shape-independent (grad psum dominates),
+                     so it only differentiates candidates on meshes where
+                     rows change the boundary traffic — flip the weight
+                     on when feeding a measured table.
 
 Pure numpy/host code — no jax imports, safe to call from the planner's
 background build threads.
@@ -130,6 +138,7 @@ class CostWeights:
     pad: float = 1.0             # per padded (invalid) token cell
     compile_miss: float = 4096.0  # per new jit signature
     live_block: float = 0.25      # per live block, scaled by block²
+    comm_byte: float = 0.0        # per audited collective wire byte
 
 
 @dataclass
@@ -141,6 +150,7 @@ class PackingCost:
     live_blocks: int
     new_signatures: int
     total: float
+    comm_bytes: int = 0          # audited wire bytes charged (0 = off)
 
     @property
     def pad_per_unique(self) -> float:
@@ -158,11 +168,14 @@ def score_packing(
     signatures: Iterable[Hashable] = (),
     cache: CompileCacheSim | None = None,
     weights: CostWeights = DEFAULT_WEIGHTS,
+    comm_bytes: int = 0,
 ) -> PackingCost:
     """Score a candidate packing: ``row_sizes[r]`` lists the serialized
     token counts sharing materialized row r (include empty rows — their
     padding is real).  ``signatures`` are the jit signatures the candidate
-    would execute; with a ``cache`` only unseen ones are charged."""
+    would execute; with a ``cache`` only unseen ones are charged.
+    ``comm_bytes``: the candidate's audited per-step collective wire
+    bytes (``wire_bytes_per_step`` over shardlint's byte table)."""
     used = sum(sum(s) for s in row_sizes)
     padded = len(row_sizes) * seq_len - used
     live, causal = _packing_live_blocks(row_sizes, seq_len, block)
@@ -171,10 +184,25 @@ def score_packing(
     miss = cache.misses(sigs) if cache is not None else len(set(sigs))
     total = (weights.pad * padded
              + weights.compile_miss * miss
-             + weights.live_block * live * block * block)
+             + weights.live_block * live * block * block
+             + weights.comm_byte * comm_bytes)
     return PackingCost(padded_tokens=padded, used_tokens=used,
                        est_skip=skip, live_blocks=live,
-                       new_signatures=miss, total=total)
+                       new_signatures=miss, total=total,
+                       comm_bytes=comm_bytes)
+
+
+def wire_bytes_per_step(comms_entry: dict) -> int:
+    """One engine step's audited collective wire bytes, summed from a
+    shardlint ``comms.json`` entrypoint entry (``engine.packed`` /
+    ``session.step``): per-op ``wire_bytes_with_loops`` from the
+    ``collectives`` summary.  Feed the result to ``score_packing``'s
+    ``comm_bytes`` with a non-zero ``CostWeights.comm_byte``."""
+    total = 0
+    for s in comms_entry.get("collectives", {}).values():
+        total += int(s.get("wire_bytes_with_loops",
+                           s.get("wire_bytes", 0)))
+    return total
 
 
 def balanced_row_order(row_loads: Sequence[int], num_replicas: int

@@ -23,7 +23,6 @@ os.environ["XLA_FLAGS"] = os.environ.get(
 
 import argparse      # noqa: E402
 import json          # noqa: E402
-import re            # noqa: E402
 import time          # noqa: E402
 import traceback     # noqa: E402
 
@@ -33,6 +32,8 @@ import numpy as np   # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro import sharding as sh                     # noqa: E402
+from repro.analysis.hlo_comms import (loop_multiplier,  # noqa: E402
+                                      parse_collectives)
 from repro.configs import (ARCH_IDS, get_config,     # noqa: E402
                            long_context_variant, supports_shape)
 from repro.configs.base import INPUT_SHAPES, ModelConfig  # noqa: E402
@@ -153,126 +154,10 @@ def build_decode_fn(cfg: ModelConfig):
     return step
 
 
-# ---------------------------------------------------------------------------
-# Cache shardings
-# ---------------------------------------------------------------------------
-
-def cache_shardings(cache_shapes, mesh, daxes, model_axis="model"):
-    msize = mesh.shape[model_axis]
-    dsize = 1
-    for a in daxes:
-        dsize *= mesh.shape[a]
-
-    def rule(path, leaf):
-        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
-        shape = leaf.shape
-        spec = [None] * len(shape)
-        # batch dim: attn caches [L,B,...] / ssm [L,B,...] / cross valid [B,F]
-        bdim = 1 if len(shape) >= 2 and name != "valid" else 0
-        if shape[bdim] % dsize == 0 and shape[bdim] >= dsize:
-            spec[bdim] = daxes
-        if name in ("k", "v", "pos") and len(shape) >= 3:
-            # shard the cache sequence dim over model (flash-decode style)
-            if shape[2] % msize == 0:
-                spec[2] = model_axis
-        elif name in ("h", "S") and len(shape) >= 3:
-            if shape[2] % msize == 0:          # heads
-                spec[2] = model_axis
-        elif name == "conv" and len(shape) == 4:
-            if shape[3] % msize == 0:
-                spec[3] = model_axis
-        elif name in ("x_tm", "x_cm"):
-            pass
-        return NamedSharding(mesh, P(*spec))
-
-    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
-    return jax.tree_util.tree_unflatten(
-        treedef, [rule(p, l) for p, l in flat])
-
-
-# ---------------------------------------------------------------------------
-# HLO collective parsing
-# ---------------------------------------------------------------------------
-
-_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
-                "s8": 1, "u8": 1, "pred": 1, "f64": 8, "s64": 8, "f8": 1}
-_COLL_RE = re.compile(
-    r"=\s*([a-z0-9]+)\[([\d,]*)\][^\s]*\s+"
-    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
-    r"[\s(]")
-
-
-def parse_collectives(hlo: str) -> list[dict]:
-    """Every collective op with result bytes + loop attribution.
-
-    Post-optimization HLO wraps ops into called computations, so lexical
-    position says nothing about loops.  We build the computation call
-    graph (to_apply / body / condition / branch edges) and mark a
-    collective as in-loop when some while body transitively reaches its
-    computation; the nesting depth (≥2 = inside the per-layer scan's inner
-    chunk scan) is recorded for the trip-count multiplier.
-    """
-    comp = "entry"
-    comp_of_line: list[tuple[str, str]] = []
-    edges: dict[str, set] = {}
-    while_bodies: set[str] = set()
-    for line in hlo.splitlines():
-        m = re.match(r"\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s*\([^)]*\)\s*->.*{",
-                     line)
-        if m:
-            comp = m.group(1)
-        comp_of_line.append((comp, line))
-        for attr in re.findall(
-                r"(?:to_apply|body|condition)=%?([\w\.\-]+)", line):
-            edges.setdefault(comp, set()).add(attr)
-        mb = re.search(r"body=%?([\w\.\-]+)", line)
-        if mb and "while(" in line:
-            while_bodies.add(mb.group(1))
-
-    # loop depth per computation: BFS from each while body
-    depth: dict[str, int] = {}
-
-    def mark(c: str, d: int):
-        if depth.get(c, 0) >= d:
-            return
-        depth[c] = d
-        for nxt in edges.get(c, ()):  # descend; nested whiles add depth
-            mark(nxt, d + 1 if nxt in while_bodies else d)
-
-    for b in while_bodies:
-        mark(b, 1)
-
-    out = []
-    for comp, line in comp_of_line:
-        m = _COLL_RE.search(line)
-        if not m:
-            continue
-        dt, dims, op = m.groups()
-        n = 1
-        for d in dims.split(","):
-            if d:
-                n *= int(d)
-        # primary loop signal: the op's own jax-level op_name metadata
-        # ("jit(step)/jvp()/while/body/..."); nested scans repeat "while/".
-        mo = re.search(r'op_name="([^"]*)"', line)
-        d_meta = mo.group(1).count("while/") if mo else 0
-        d_cg = depth.get(comp, 0)
-        d_final = max(d_meta, d_cg)
-        out.append({"op": op, "dtype": dt,
-                    "bytes": n * _DTYPE_BYTES.get(dt, 4),
-                    "comp": comp,
-                    "loop_depth": d_final,
-                    "in_loop": d_final >= 1})
-    return out
-
-
-def loop_multiplier(cfg: ModelConfig) -> int:
-    """Scan-over-layers trip count (dominant while loop)."""
-    from repro.models.transformer import layer_groups
-    groups = layer_groups(cfg)
-    if cfg.family == "hybrid":
-        return cfg.hybrid.attn_every
-    return max(n for _, n in groups)
+# cache_shardings moved to repro.sharding (shared with shardlint); the
+# HLO collective parser moved to repro.analysis.hlo_comms — both kept as
+# names here for the existing callers of this module.
+cache_shardings = sh.cache_shardings
 
 
 # ---------------------------------------------------------------------------

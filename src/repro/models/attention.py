@@ -28,6 +28,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import AttnCfg
 from repro.models.layers import _dense_init, init_rmsnorm, rmsnorm, rope
+from repro.sharding import tp_out_proj
 
 NEG_INF = -1e30
 
@@ -264,7 +265,7 @@ def attention(
                             pos_q=pos_ids, pos_k=pos_k)
     else:
         raise ValueError(impl)
-    y = o.reshape(B, S, -1) @ params["wo"]
+    y = tp_out_proj(o.reshape(B, S, -1), params["wo"])
     if capture_idx is not None:
         return y, caps
     return y

@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.sharding import tp_out_proj
+
 
 def _dense_init(key, shape, scale: Optional[float] = None, dtype=jnp.float32):
     fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
@@ -90,7 +92,7 @@ def mlp(params: dict, x: jax.Array, activation: str) -> jax.Array:
         h = jax.nn.relu(x @ params["wi_up"])
     else:
         raise ValueError(activation)
-    y = h @ params["wo"]
+    y = tp_out_proj(h, params["wo"])
     if "bo" in params:
         y = y + params["bo"]
     return y

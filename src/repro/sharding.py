@@ -34,9 +34,15 @@ _CTX = _Ctx()
 def use_mesh(mesh: Mesh, data_axes=("data",), model_axis="model",
              seq_parallel: bool = False):
     """seq_parallel: additionally shard the sequence dim of inter-block
-    activations over the model axis (Megatron sequence parallelism) — the
-    forward TP all-reduce after each block's output projection becomes
-    reduce-scatter + all-gather, halving ICI bytes on that path."""
+    activations over the model axis (Megatron sequence parallelism).  The
+    *forward* TP reduction after each block's output projection is issued
+    as a true reduce-scatter (``tp_out_proj``) instead of an all-reduce —
+    half the forward wire bytes on that edge — and its backward re-gather
+    is an all-gather.  Total fwd+bwd boundary bytes are conserved (ring
+    all-reduce ≡ reduce-scatter + all-gather); the win is the halved
+    forward path plus boundary activations living S/tp-sharded.  shardlint
+    (``analysis/comms_audit``) proves the forward-path drop statically —
+    this docstring is a lint invariant, not a hope."""
     old = (_CTX.mesh, _CTX.data_axes, _CTX.model_axis, _CTX.seq_parallel)
     _CTX.mesh, _CTX.data_axes, _CTX.model_axis, _CTX.seq_parallel = \
         mesh, tuple(data_axes), model_axis, seq_parallel
@@ -72,6 +78,48 @@ def shard_activation(x: jax.Array) -> jax.Array:
         seq = _CTX.model_axis
     s = _ns(P(_CTX.data_axes, seq, *([None] * (x.ndim - 2))))
     return x if s is None else jax.lax.with_sharding_constraint(x, s)
+
+
+def seq_sharded(S: int) -> bool:
+    """True when sequence parallelism is active and a length-``S`` sequence
+    dim divides the model axis (the condition under which
+    ``shard_activation`` shards S and ``tp_out_proj`` scatters)."""
+    return (_CTX.mesh is not None and _CTX.seq_parallel
+            and S % _CTX.mesh.shape[_CTX.model_axis] == 0)
+
+
+def tp_out_proj(h: jax.Array, w: jax.Array) -> jax.Array:
+    """TP output projection ``h @ w`` (h: [B, S, F] feature-sharded over the
+    model axis, w: [F, D] row-sharded).
+
+    Without sequence parallelism this is a plain matmul — GSPMD inserts the
+    usual all-reduce of the partial products.  With ``seq_parallel=True``
+    the reduction is issued explicitly as ``psum_scatter`` inside a
+    ``shard_map``, so the lowered HLO carries a true reduce-scatter (result
+    [B, S, D] sharded S-over-model) instead of all-reduce + slice: half the
+    wire bytes on the boundary, and the backward of the scatter is an
+    all-gather rather than another all-reduce.  Falls back to the plain
+    matmul whenever any dim doesn't divide its axis."""
+    mesh, m = _CTX.mesh, _CTX.model_axis
+    if (not seq_sharded(h.shape[1]) or h.ndim != 3
+            or h.shape[-1] % mesh.shape[m] != 0
+            or w.shape[0] % mesh.shape[m] != 0):
+        return h @ w
+    from jax.experimental.shard_map import shard_map
+    daxes = _CTX.data_axes
+    dsize = 1
+    for a in daxes:
+        dsize *= mesh.shape[a]
+    bspec = daxes if h.shape[0] % dsize == 0 else None
+
+    def local(hl, wl):
+        return jax.lax.psum_scatter(hl @ wl, m, scatter_dimension=1,
+                                    tiled=True)
+
+    return shard_map(local, mesh,
+                     in_specs=(P(bspec, None, m), P(m, None)),
+                     out_specs=P(bspec, m, None),
+                     check_rep=False)(h, w)
 
 
 def shard_spec(x: jax.Array, *axes) -> jax.Array:
@@ -141,6 +189,14 @@ _RULES: list[tuple[str, Any]] = [
     (r"ssm/in_[zx]$|ssm/in_proj$|tm/w[rkvg]$|ssm/w[qkvz]$",
      lambda s, m: P(None, "M" if s[1] % m == 0 else None)),
     (r"ssm/in_[BC]$|ssm/in_dt$|ssm/w[ab]$",
+     lambda s, m: P(None, None)),
+    # intentionally replicated ≥2-D tensors (explicit so shardlint's
+    # closed-coverage rule lint proves intent, not fall-through):
+    # depthwise conv taps follow the locally-resident d_inner slice; the
+    # rwkv6 mix interpolants, per-head bonus, decay LoRA and channelmix
+    # gate are small and stay off the collective hot path (see the
+    # test_sharding replicate-allowlist and per-module init docstrings)
+    (r"ssm/conv_w$|tm/mix$|cm/mix$|cm/wr$|tm/u$|tm/w_lora_[ab]$",
      lambda s, m: P(None, None)),
     (r"ssm/out_proj$|tm/wo$",
      lambda s, m: P("M" if s[0] % m == 0 else None, None)),
@@ -219,3 +275,40 @@ def batch_shardings(batch_shape: Any, mesh: Mesh,
         return NamedSharding(mesh, P(lead, *([None] * (len(leaf.shape) - 1)))
                              if leaf.shape else P())
     return jax.tree_util.tree_map(one, batch_shape)
+
+
+def cache_shardings(cache_shapes: Any, mesh: Mesh, daxes=("data",),
+                    model_axis: str = "model") -> Any:
+    """Decode-cache layout: batch dim over the data axes; KV sequence dim
+    (flash-decode style) / SSM heads / conv channels over the model axis.
+    Shared by the dry-run tool and shardlint's DecodeSession audit."""
+    msize = mesh.shape[model_axis]
+    dsize = 1
+    for a in daxes:
+        dsize *= mesh.shape[a]
+
+    def rule(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        # batch dim: attn caches [L,B,...] / ssm [L,B,...] / cross valid [B,F]
+        bdim = 1 if len(shape) >= 2 and name != "valid" else 0
+        if shape[bdim] % dsize == 0 and shape[bdim] >= dsize:
+            spec[bdim] = daxes
+        if name in ("k", "v", "pos") and len(shape) >= 3:
+            # shard the cache sequence dim over model (flash-decode style)
+            if shape[2] % msize == 0:
+                spec[2] = model_axis
+        elif name in ("h", "S") and len(shape) >= 3:
+            if shape[2] % msize == 0:          # heads
+                spec[2] = model_axis
+        elif name == "conv" and len(shape) == 4:
+            if shape[3] % msize == 0:
+                spec[3] = model_axis
+        elif name in ("x_tm", "x_cm"):
+            pass
+        return NamedSharding(mesh, P(*spec))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    return jax.tree_util.tree_unflatten(
+        treedef, [rule(p, l) for p, l in flat])
