@@ -559,6 +559,62 @@ def bench_plan_efficiency(smoke: bool = False, impl: str = "ref") -> None:
     assert r_p <= r_g, (r_p, r_g)   # planner never pads more than greedy
 
 
+def bench_cross_tree_reuse(smoke: bool = False, impl: str = "ref") -> None:
+    """Cross-tree forest grafting (core/forest + train/planner --graft):
+    unique computed tokens and pad-per-unique with grafting on vs off on
+    a template-heavy stream (N system-prompt templates shared verbatim
+    across trees), at matched loss — the schedule-level dedup the
+    within-tree Tree Packing cannot reach."""
+    from repro.data.loader import LoaderConfig
+    from repro.train.engine import TreeTrainEngine
+    from repro.train.planner import PlannerConfig, plan_stream
+
+    if smoke:
+        cfg = bench_model(n_layers=2, d_model=64)
+        S, rows, trees, steps = 256, 2, 4, 4
+        gen = dict(num_templates=2, template_len=128, num_turns=1,
+                   turn_len_range=(4, 16))
+    else:
+        cfg = bench_model(n_layers=2)
+        S, rows, trees, steps = 512, 4, 6, 12
+        gen = dict(num_templates=3, template_len=320, num_turns=1,
+                   turn_len_range=(8, 32))
+    lc = LoaderConfig(seq_len=S, batch_rows=rows, trees_per_batch=trees,
+                      mode="tree", kind="template", seed=17,
+                      auto_partition=True, gen_kwargs=gen)
+    params = init_params(cfg, jax.random.key(0))
+
+    def run(graft: bool):
+        pc = PlannerConfig(lookahead=4, graft=graft, min_graft=32)
+        eng = TreeTrainEngine(cfg, impl=impl, donate=False)
+        uniq = pad = ntrees = 0
+        loss_sum = 0.0
+        sched = 0.0
+        t0 = time.perf_counter()
+        for ps in plan_stream(cfg, lc, steps, pc):
+            sched += time.perf_counter() - t0
+            plan = ps.execution_plan()
+            _, scal = eng.accumulate(params, plan)
+            n = plan.num_trees
+            loss_sum += n * float(np.asarray(scal)[0])
+            ntrees += n
+            uniq += plan.unique_tokens
+            pad += plan.padded_tokens
+            t0 = time.perf_counter()
+        return (uniq, pad / max(uniq, 1), loss_sum / max(ntrees, 1),
+                ntrees, sched)
+
+    u_off, ppu_off, l_off, n_off, _ = run(False)
+    u_on, ppu_on, l_on, n_on, sched_on = run(True)
+    assert n_on == n_off, (n_on, n_off)   # no tree gained or lost
+    saved = 1.0 - u_on / max(u_off, 1)
+    emit("cross_tree_reuse", sched_on * 1e6 / max(steps, 1),
+         f"saved_token_frac={saved:.3f} unique={u_off}->{u_on} "
+         f"pad_per_unique_off={ppu_off:.3f} pad_per_unique_on={ppu_on:.3f} "
+         f"loss_rel={abs(l_on - l_off) / max(abs(l_off), 1e-9):.2e}")
+    assert saved >= 0.0, saved            # grafting never computes MORE
+
+
 # ---------------------------------------------------------------------------
 # the closed async RL loop — prefix-KV reuse + generation/training overlap
 # ---------------------------------------------------------------------------
@@ -751,6 +807,7 @@ def main(argv=None) -> None:
         bench_gateway_impl(smoke=True)
         bench_engine_step(smoke=True, impl=args.impl)
         bench_plan_efficiency(smoke=True, impl=args.impl)
+        bench_cross_tree_reuse(smoke=True, impl=args.impl)
         bench_rl_service(smoke=True, impl=args.impl)
         bench_comms_table()
     else:
@@ -765,6 +822,7 @@ def main(argv=None) -> None:
         bench_gateway_impl()
         bench_engine_step(impl=args.impl)
         bench_plan_efficiency(impl=args.impl)
+        bench_cross_tree_reuse(impl=args.impl)
         bench_rl_service(impl=args.impl)
         bench_comms_table()
     if args.out:

@@ -11,7 +11,10 @@ Runs every static pass and exits non-zero on any finding:
      one-host-sync proof: zero in-jaxpr callbacks + one caller-side
      transfer site);
   4. signature lint — a real lookahead planner run emits only
-     in-universe jit signatures (``signatures``);
+     in-universe jit signatures (``signatures``), replayed twice: once
+     on the default forest and once graft-enabled over a template-heavy
+     stream, so cross-tree grafted plans stay inside the same
+     SignatureUniverse;
   5. mask soundness — the Pallas block-skip predicate over the bucketed
      boundary universe + packed random trees (``mask_check``).
 
@@ -61,6 +64,8 @@ def _engine_host_transfer_findings() -> list:
 
 def run_lint(archs, *, impl: str = "ref", lookahead: int = 2,
              fast: bool = True, verbose: bool = True) -> tuple[list, dict]:
+    from dataclasses import replace
+
     from repro.analysis import jaxpr_audit, mask_check, signatures
     from repro.analysis.registry import (audit_loader_config,
                                          build_targets,
@@ -90,16 +95,27 @@ def run_lint(archs, *, impl: str = "ref", lookahead: int = 2,
                                           trees_per=lc.trees_per_batch)
         sig_f, sig_rep = signatures.lint_signatures(cfg, lc, pc, src)
         findings += sig_f
+        # graft replay: the same universe must contain every signature a
+        # graft-enabled plan emits on a template-heavy stream (grafted
+        # forests pack/partition through the same shape buckets)
+        pcg = replace(pc, graft=True, min_graft=max(lc.seq_len // 8, 8))
+        gsrc = signatures.template_source(cfg, lc,
+                                          n_batches=2 * lookahead,
+                                          trees_per=lc.trees_per_batch)
+        gsig_f, gsig_rep = signatures.lint_signatures(cfg, lc, pcg, gsrc)
+        findings += gsig_f
         report["archs"][arch] = {
             "targets": [t.name for t in targets],
             "jaxpr_findings": len(arch_f),
             "signatures": sig_rep,
+            "graft_signatures": gsig_rep,
             "seconds": round(time.perf_counter() - t0, 2),
         }
         say(f"{arch}: {len(targets)} entrypoints audited, "
             f"{sig_rep['signatures_distinct']} distinct jit signatures "
-            f"(AOT universe {sig_rep['aot_universe_size']}), "
-            f"{len(arch_f) + len(sig_f)} findings "
+            f"(AOT universe {sig_rep['aot_universe_size']}, "
+            f"+{gsig_rep['signatures_distinct']} grafted), "
+            f"{len(arch_f) + len(sig_f) + len(gsig_f)} findings "
             f"[{report['archs'][arch]['seconds']}s]")
 
     cov = [jaxpr_audit.Finding("registry", "coverage", m)

@@ -181,3 +181,20 @@ def synthetic_source(cfg, n_batches: int, trees_per: int, seed: int = 0):
     from repro.analysis.registry import _forest
     return [_forest(1000 * seed + b, trees_per, cfg.vocab_size)
             for b in range(n_batches)]
+
+
+def template_source(cfg, lc, n_batches: int, trees_per: int,
+                    seed: int = 0):
+    """Template-heavy forests scaled to the audit LoaderConfig's unit —
+    every tree opens with one of two verbatim system-prompt templates
+    (``data.synthetic.template_tree``), so a graft-enabled planner replay
+    actually merges trees and its grafted plans' signatures get checked
+    against the same :class:`SignatureUniverse` as ungrafted ones."""
+    from repro.data.synthetic import trees_for_batch
+    unit = max(lc.seq_len // 8, 8)
+    return [trees_for_batch(1000 * seed + b, n_trees=trees_per,
+                            kind="template", vocab_size=cfg.vocab_size,
+                            num_templates=2, template_len=2 * unit,
+                            num_turns=2,
+                            turn_len_range=(unit // 2, 2 * unit))
+            for b in range(n_batches)]

@@ -120,17 +120,23 @@ def materialize_tree_rows(
     seq_len: int,
     *,
     chunk_size: Optional[int] = None,
+    tree_counts: Optional[Sequence[int]] = None,
 ) -> TreeBatch:
     """Materialize a planned row assignment (``rows[r]`` = tree indices
     sharing row r, in placement order) into a fixed-shape TreeBatch.  If
     ``chunk_size`` is given the serializations must be chunk-aligned and
-    rows carry a chunk_parent map."""
+    rows carry a chunk_parent map.  ``tree_counts[i]`` is how many SOURCE
+    trees serialization i represents (a grafted cross-tree forest counts
+    all its members — the loss normalizer and ``row_trees`` accounting
+    must see source trees, not grafted roots); default 1 each."""
     for r in rows:
         if sum(trees[i].n for i in r) > seq_len:
             raise DoesNotFitError(
                 f"planned row of {sum(trees[i].n for i in r)} tokens "
                 f"exceeds seq_len {seq_len}")
     B, S = len(rows), seq_len
+    count = (lambda i: 1) if tree_counts is None \
+        else (lambda i: int(tree_counts[i]))
     cols = {k: [] for k in
             ("tokens", "pos_ids", "kv_last", "weight", "prev_idx", "valid")}
     chunk_rows: list[np.ndarray] = []
@@ -170,8 +176,9 @@ def materialize_tree_rows(
         prev_idx=np.stack(cols["prev_idx"]),
         valid=np.stack(cols["valid"]),
         chunk_parent=np.stack(chunk_rows) if chunk_rows else None,
-        num_trees=sum(len(r) for r in rows),
-        row_trees=np.asarray([len(r) for r in rows], np.int32),
+        num_trees=sum(count(i) for r in rows for i in r),
+        row_trees=np.asarray([sum(count(i) for i in r) for r in rows],
+                             np.int32),
     )
 
 

@@ -31,9 +31,14 @@ from .tree import (SerializedTree, TrajectoryTree, TreeNode,
                    _branch_adv_sums, _leaf_counts, serialize_tree)
 
 
-def split_long_nodes(tree: TrajectoryTree, max_len: int) -> TrajectoryTree:
+def split_long_nodes(tree: TrajectoryTree, max_len: int,
+                     origin: Optional[dict] = None) -> TrajectoryTree:
     """Pre-split node segments longer than max_len into chains (semantics
-    unchanged — a chain of nodes spells the same paths)."""
+    unchanged — a chain of nodes spells the same paths).  ``origin``, if
+    given, is filled with id(new node) → id(source node) so id-keyed
+    metadata (an external λ map) can be remapped onto the copy: every
+    piece of a split chain has the same leaf set beneath it, hence the
+    same λ, as the node it came from."""
 
     def rec(n: TreeNode) -> TreeNode:
         children = [rec(c) for c in n.children]
@@ -41,6 +46,8 @@ def split_long_nodes(tree: TrajectoryTree, max_len: int) -> TrajectoryTree:
             m = TreeNode(tokens=n.tokens, trained=n.trained,
                          advantage=n.advantage, branch_adv=n.branch_adv)
             m.children = children
+            if origin is not None:
+                origin[id(m)] = id(n)
             return m
         head: Optional[TreeNode] = None
         cur: Optional[TreeNode] = None
@@ -50,6 +57,8 @@ def split_long_nodes(tree: TrajectoryTree, max_len: int) -> TrajectoryTree:
                              advantage=None if n.advantage is None
                              else n.advantage[s:e],
                              branch_adv=n.branch_adv)
+            if origin is not None:
+                origin[id(piece)] = id(n)
             if head is None:
                 head = piece
             else:
@@ -100,18 +109,29 @@ def partition_tree(
     *,
     chunk_size: Optional[int] = None,
     loss_mode: str = "sep_avg",
+    lam_map: Optional[dict] = None,
 ) -> list[TreePartition]:
     """Plan partitions for one tree.  Returns them in DFS (topological)
-    order: parents precede children."""
+    order: parents precede children.
+
+    ``lam_map`` (id(node) → λ on the *input* tree) overrides the
+    loss_mode-derived weights — a grafted cross-tree forest
+    (``core/forest``) carries its summed/preserved per-branch λ this way
+    when the merged tree exceeds capacity and partitions like any
+    oversized tree."""
     unit = chunk_size or 1
     assert capacity % unit == 0 or chunk_size is None
+    origin: dict[int, int] = {}
     tree = split_long_nodes(tree, max(1, capacity - (unit - 1))
-                            if chunk_size else capacity)
+                            if chunk_size else capacity, origin)
 
     # full-tree weights
     g = _leaf_counts(tree.root)
     K = g[id(tree.root)]
-    if loss_mode == "uniform":
+    if lam_map is not None:
+        ext = lam_map
+        lam_map = {id(n): ext[origin[id(n)]] for n in tree.nodes()}
+    elif loss_mode == "uniform":
         lam_map = {nid: 1.0 for nid in g}
     elif loss_mode == "rl":
         lam_map = {nid: a / K
@@ -251,6 +271,43 @@ def partition_schedule_load(parts: list[TreePartition]) -> dict:
                 num_partitions=len(parts),
                 depth=1 + max(depth.values()) if depth else 0,
                 width=max(width.values()) if width else 0)
+
+
+def choose_capacity(trees: list[TrajectoryTree], seq_len: int, *,
+                    chunk_size: Optional[int] = None,
+                    max_candidates: int = 4) -> int:
+    """Planner-chosen partition capacity (the carried ROADMAP item): pick
+    the per-partition token cap for a window's oversized trees from
+    ``partition_schedule_load`` instead of a user-fixed ``--capacity``.
+
+    Candidates are pow2 fractions of ``seq_len`` (so capture-path pads
+    stay inside the pow2 signature buckets the engine compiles), scored
+    in token-cell units: every partition materializes a full ``seq_len``
+    wave-row slot, and each extra wave depth level is another dispatch
+    on the step's critical path.  Ties keep the larger cap.  Partition
+    *structure* depends only on token counts, so the probe partitions
+    under ``sep_avg`` regardless of the training loss mode."""
+    unit = chunk_size or 1
+    cands: list[int] = []
+    c = seq_len
+    while c >= max(2 * unit, 32) and len(cands) < max_candidates:
+        if c % unit == 0:
+            cands.append(c)
+        c //= 2
+    if not cands:
+        return seq_len
+    best: Optional[tuple[float, int]] = None
+    for cap in cands:                      # descending: ties keep larger
+        cells = depth = 0
+        for t in trees:
+            load = partition_schedule_load(
+                partition_tree(t, cap, chunk_size=chunk_size))
+            cells += load["num_partitions"] * seq_len
+            depth += load["depth"]
+        score = cells + 0.25 * depth * seq_len
+        if best is None or score < best[0]:
+            best = (score, cap)
+    return best[1]
 
 
 def partition_token_counts(parts: list[TreePartition]) -> dict:

@@ -139,6 +139,8 @@ class CostWeights:
     compile_miss: float = 4096.0  # per new jit signature
     live_block: float = 0.25      # per live block, scaled by block²
     comm_byte: float = 0.0        # per audited collective wire byte
+    graft_saved: float = 1.0      # credit per cross-tree deduped cell
+    graft_cut: float = 64.0       # per extra gateway boundary a graft adds
 
 
 @dataclass
@@ -190,6 +192,36 @@ def score_packing(
                        est_skip=skip, live_blocks=live,
                        new_signatures=miss, total=total,
                        comm_bytes=comm_bytes)
+
+
+def graft_gain(src_cells: int, merged_cells: int, seq_len: int,
+               capacity: int,
+               weights: CostWeights = DEFAULT_WEIGHTS, *,
+               parts: int | None = None) -> float:
+    """Net token-cell gain of one cross-tree graft (``core/forest``) —
+    the schedule-level dedup term: graft iff the result is > 0.
+
+    ``src_cells`` is the summed *serialized* length of the source trees
+    (chunk padding included) and ``merged_cells`` the grafted tree's, so
+    the credit already nets out the node fragmentation the merge adds
+    under SSM chunk alignment.  When the merged forest no longer fits a
+    packed row it partitions like any oversized tree — charge the wave
+    rows' fragmentation (each partition materializes a full ``seq_len``
+    row slot) plus ``graft_cut`` per extra gateway boundary the wider
+    fan-out relays cotangents across.  Pass ``parts`` (the REAL
+    partition count from ``core.partition.partition_tree``) when known:
+    tree partitions cut at subtree boundaries, so the capacity quotient
+    badly underestimates the wave rows a branchy forest materializes —
+    the planner supplies the real count so losing grafts (padding out-
+    weighing dedup) are rejected or bisected instead of shipped."""
+    gain = weights.graft_saved * (src_cells - merged_cells)
+    if merged_cells > seq_len:
+        if parts is None:
+            parts = -(-merged_cells // max(capacity, 1))
+        frag = parts * seq_len - merged_cells
+        gain -= weights.pad * max(frag, 0)
+        gain -= weights.graft_cut * (parts - 1)
+    return gain
 
 
 def wire_bytes_per_step(comms_entry: dict) -> int:

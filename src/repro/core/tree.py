@@ -220,6 +220,24 @@ def _branch_adv_sums(root: TreeNode) -> dict[int, float]:
     return s
 
 
+def tree_lam_map(root: TreeNode, loss_mode: str) -> dict[int, float]:
+    """id(node) → λ for every node of the tree rooted at ``root``, under
+    ``loss_mode`` — exactly the per-node weight ``serialize_tree`` would
+    assign.  The single definition shared by the partitioner (pruned
+    subtrees keep full-tree weights) and the cross-tree grafter
+    (``core/forest``: unshared nodes keep their source tree's weights
+    bit-exactly)."""
+    g = _leaf_counts(root)
+    K = g[id(root)]
+    if loss_mode == "uniform":
+        return {nid: 1.0 for nid in g}
+    if loss_mode == "rl":
+        return {nid: a / K for nid, a in _branch_adv_sums(root).items()}
+    if loss_mode == "sep_avg":
+        return {nid: gn / K for nid, gn in g.items()}
+    raise ValueError(loss_mode)
+
+
 def serialize_tree(
     tree: TrajectoryTree,
     *,

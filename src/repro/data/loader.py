@@ -37,6 +37,10 @@ class LoaderConfig:
     gen_kwargs: Optional[dict] = None
     auto_partition: bool = False  # route oversized trees via partitioning
     capacity: Optional[int] = None  # partition token cap (default seq_len)
+    # planner-chosen capacity: with capacity=None the planner resolves the
+    # cap per lookahead window via core/partition.choose_capacity instead
+    # of defaulting to seq_len (an explicit ``capacity`` always wins)
+    auto_capacity: bool = False
 
 
 @dataclass

@@ -9,6 +9,10 @@ Two flavors, matching the paper's experiments:
   - ``grpo_tree``: the RL model-update workload — an agentic tree whose
     branches carry group-normalized per-branch advantages
     (``TreeNode.branch_adv``), consumed by ``loss_mode="rl"``.
+  - ``template_tree`` / ``template_stream``: N distinct system-prompt
+    templates shared verbatim across trees and batches (configurable
+    overlap ratio) — the cross-tree shared-prefix workload the forest
+    grafter (``core/forest``) exists for.
 """
 from __future__ import annotations
 
@@ -127,6 +131,67 @@ def agentic_tree(
     return TrajectoryTree(root=build(0))
 
 
+def template_tokens(template_seed: int, template_id: int, length: int,
+                    vocab_size: int) -> np.ndarray:
+    """The token ids of one system-prompt template — deterministic in
+    (template_seed, template_id) and independent of the per-batch rng, so
+    every batch of a stream (and every lookahead window) sees the SAME
+    template text: the cross-tree shared prefix the forest grafter
+    (``core/forest``) dedups."""
+    trng = np.random.default_rng([int(template_seed), int(template_id)])
+    return trng.integers(0, vocab_size, int(length)).astype(np.int32)
+
+
+def template_tree(
+    rng: np.random.Generator,
+    *,
+    vocab_size: int = 32000,
+    num_templates: int = 4,
+    template_len: int = 64,
+    overlap: float = 1.0,
+    template_seed: int = 7,
+    num_turns: int = 3,
+    turn_len_range: tuple[int, int] = (16, 64),
+    tool_branch_prob: float = 0.4,
+    think_branch_prob: float = 0.3,
+    max_parallel_tools: int = 3,
+) -> TrajectoryTree:
+    """The production template workload: each trajectory opens with one
+    of ``num_templates`` distinct system-prompt templates (shared
+    verbatim across trees AND batches — see ``template_tokens``), then
+    continues as an agentic rollout tree.  ``overlap`` is the fraction of
+    the template kept verbatim; the rest is per-tree noise (prompt
+    suffixes, user names, timestamps), so grafting's prefix-trie has a
+    configurable exact-match region.  Template tokens are context, not
+    model output: ``trained=False``."""
+    tid = int(rng.integers(num_templates))
+    toks = template_tokens(template_seed, tid, template_len, vocab_size)
+    shared = int(round(min(max(overlap, 0.0), 1.0) * template_len))
+    head_toks = np.concatenate([
+        toks[:shared],
+        rng.integers(0, vocab_size, template_len - shared).astype(np.int32)])
+    head = TreeNode(tokens=head_toks,
+                    trained=np.zeros(template_len, bool))
+    tail = agentic_tree(rng, vocab_size=vocab_size, num_turns=num_turns,
+                        turn_len_range=turn_len_range,
+                        tool_branch_prob=tool_branch_prob,
+                        think_branch_prob=think_branch_prob,
+                        max_parallel_tools=max_parallel_tools)
+    head.children = [tail.root]
+    return TrajectoryTree(root=head)
+
+
+def template_stream(seed: int, *, num_batches: int, trees_per_batch: int,
+                    **kw):
+    """Iterator of generator batches of ``template_tree``\\ s — the
+    template-heavy stream grafting benchmarks/tests plan over (usable
+    directly as a ``train.planner.plans`` source)."""
+    for b in range(num_batches):
+        yield trees_for_batch(seed * 100_003 + b,
+                              n_trees=trees_per_batch, kind="template",
+                              **kw)
+
+
 def group_normalized_advantages(rewards, normalize: bool = True
                                 ) -> np.ndarray:
     """GRPO group baseline: A = (r − mean)/std over the group's rewards
@@ -194,5 +259,5 @@ def trees_for_batch(
     rng = np.random.default_rng(seed)
     gen = {"random": random_tree, "chain": chain_tree,
            "por": por_controlled_tree, "agentic": agentic_tree,
-           "grpo": grpo_tree}[kind]
+           "grpo": grpo_tree, "template": template_tree}[kind]
     return [gen(rng, **kw) for _ in range(n_trees)]

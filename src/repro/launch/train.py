@@ -19,6 +19,16 @@ planner picks per-replica row counts sized to the mesh's data axis.
 ``--auto-partition`` routes trees larger than one row through
 Redundancy-Free Tree Partitioning (wave-scheduled, ``--capacity`` token
 cap per partition) instead of silently dropping them — zero data loss.
+``--capacity`` defaults to ``auto``: the planner sizes the cap per
+lookahead window from the oversized trees it actually sees
+(``core.partition.choose_capacity``); an integer forces it.
+
+``--graft`` turns on cross-tree forest grafting (``core/forest``): trees
+in the lookahead window that open with the same token prefix — shared
+system prompts, few-shot preambles — are merged into one grafted forest
+so the shared prefix is computed once per window instead of once per
+tree (pair with ``--kind template`` for the synthetic version of that
+workload).
 
 ``--loss-mode rl`` trains the RL model-update objective: per-branch GRPO
 advantages scale λ_t (pair with ``--kind grpo`` rollout trees; with
@@ -78,14 +88,28 @@ def main() -> None:
                          "λ_t = 1; rl: GRPO per-branch advantages scale "
                          "λ_t (the RL model-update phase)")
     ap.add_argument("--kind", default=None,
-                    choices=["agentic", "grpo", "random"],
+                    choices=["agentic", "grpo", "random", "template"],
                     help="synthetic tree generator (default: agentic; "
-                         "grpo when --loss-mode rl)")
+                         "grpo when --loss-mode rl; template = shared "
+                         "system-prompt workload for --graft)")
     ap.add_argument("--auto-partition", action="store_true",
                     help="train oversized trees via wave-scheduled "
                          "partitioning instead of dropping them")
-    ap.add_argument("--capacity", type=int, default=None,
-                    help="partition token cap (default: --seq-len)")
+    ap.add_argument("--capacity", default="auto",
+                    help="partition token cap: an integer forces it; "
+                         "'auto' (default) lets the planner choose per "
+                         "lookahead window from the oversized trees' "
+                         "partition-count/depth trade-off "
+                         "(core.partition.choose_capacity)")
+    ap.add_argument("--graft", action="store_true",
+                    help="cross-tree forest grafting: merge trees that "
+                         "share a token prefix (core/forest) before "
+                         "packing, so shared system prompts are computed "
+                         "once per window")
+    ap.add_argument("--min-graft", type=int, default=16,
+                    help="minimum shared-prefix tokens for a graft to be "
+                         "considered (shorter matches never pay for the "
+                         "merge)")
     ap.add_argument("--mesh", default="host",
                     choices=["host", "single", "multi"])
     ap.add_argument("--seed", type=int, default=0)
@@ -107,19 +131,32 @@ def main() -> None:
     print(f"[train] arch={cfg.name} family={cfg.family} mode={args.mode} "
           f"impl={args.impl} loss_mode={args.loss_mode} kind={args.kind}")
 
+    auto_capacity = False
+    if str(args.capacity).lower() == "auto":
+        args.capacity = None
+        auto_capacity = True
+    else:
+        try:
+            args.capacity = int(args.capacity)
+        except ValueError:
+            ap.error(f"--capacity must be an integer or 'auto', got "
+                     f"{args.capacity!r}")
     if args.auto_partition:
         if args.mode != "tree":
             ap.error("--auto-partition requires --mode tree (partitioning "
                      "is a tree-serialization feature; baseline mode "
                      "would silently drop oversized trees)")
-        cap = args.capacity if args.capacity is not None else args.seq_len
-        if not 0 < cap <= args.seq_len:
-            ap.error(f"--capacity {cap} must be in (0, --seq-len "
-                     f"{args.seq_len}]")
-        if cfg.ssm is not None and cap % cfg.ssm.chunk_size != 0:
-            ap.error(f"--capacity {cap} must be a multiple of the SSM "
-                     f"chunk size {cfg.ssm.chunk_size}")
-        args.capacity = cap
+        if args.capacity is not None:
+            cap = args.capacity
+            if not 0 < cap <= args.seq_len:
+                ap.error(f"--capacity {cap} must be in (0, --seq-len "
+                         f"{args.seq_len}]")
+            if cfg.ssm is not None and cap % cfg.ssm.chunk_size != 0:
+                ap.error(f"--capacity {cap} must be a multiple of the SSM "
+                         f"chunk size {cfg.ssm.chunk_size}")
+    if args.graft and args.mode != "tree":
+        ap.error("--graft requires --mode tree (grafted forests are "
+                 "serialized trees; baseline rows cannot share prefixes)")
 
     if args.mesh == "host":
         mesh, daxes = make_host_mesh(), ("data",)
@@ -151,6 +188,7 @@ def main() -> None:
                       loss_mode=args.loss_mode,
                       auto_partition=args.auto_partition,
                       capacity=args.capacity,
+                      auto_capacity=auto_capacity,
                       gen_kwargs=gen_kwargs)
 
     with sh.use_mesh(mesh, data_axes=daxes):
@@ -167,7 +205,8 @@ def main() -> None:
 
         pcfg = PlannerConfig(lookahead=args.lookahead,
                              plan_workers=args.plan_workers,
-                             num_replicas=ndata, max_rows=args.rows)
+                             num_replicas=ndata, max_rows=args.rows,
+                             graft=args.graft, min_graft=args.min_graft)
         pipe = plans(cfg, lc, args.steps, pcfg)
 
         tokens_done = padded_total = part_trees = part_tokens = 0

@@ -9,6 +9,20 @@ module owns everything above it — the schedule level:
                       ``core/plan_cost``), instead of first-fit inside
                       each batch — holes left by one batch are filled by
                       the next one's trees;
+  forest grafting     with ``PlannerConfig.graft``, trees whose heads
+                      share a ≥ ``min_graft`` token prefix *across* the
+                      window are merged into grafted forests
+                      (``core/forest``) so each cross-tree prefix is
+                      computed once per window; every merge is gated by
+                      the cost model's dedup term
+                      (``plan_cost.graft_gain``) and the loss stays a
+                      mean over SOURCE trees (``n_src`` rides through
+                      FitTree/OversizedTree into the normalizer);
+  auto capacity       with ``LoaderConfig.auto_capacity`` the partition
+                      token cap is chosen per window from
+                      ``core/partition.choose_capacity`` (pow2 fractions
+                      of seq_len scored by ``partition_schedule_load``)
+                      instead of a user-fixed ``--capacity``;
   replica balance     every emitted batch's row count is a multiple of
                       the mesh data-axis size and rows are permuted so
                       contiguous per-replica shards carry non-empty-row
@@ -48,14 +62,16 @@ from typing import Any, Callable, Iterable, Iterator, Optional, Sequence
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.forest import graft_trees
 from repro.core.packing import (DoesNotFitError, pack_linear_paths,
                                 materialize_tree_rows)
-from repro.core.partition import (TreePartition, partition_schedule_load,
-                                  partition_tree)
+from repro.core.partition import (TreePartition, choose_capacity,
+                                  partition_schedule_load, partition_tree)
 from repro.core.plan_cost import (DEFAULT_WEIGHTS, CompileCacheSim,
                                   CostWeights, PackingCost,
-                                  balanced_row_order, packed_signature,
-                                  round_to_multiple, score_packing)
+                                  balanced_row_order, graft_gain,
+                                  packed_signature, round_to_multiple,
+                                  score_packing)
 from repro.core.tree import TrajectoryTree, serialize_tree
 from repro.data.loader import LoaderConfig, StepBatch, tree_stream
 from repro.models.model import needs_chunks, prepare_batch
@@ -72,6 +88,8 @@ class PlannerConfig:
     weights: CostWeights = DEFAULT_WEIGHTS
     max_rows: Optional[int] = None  # wave row cap (None: batch_rows)
     pipeline_depth: int = 2       # plans buffered ahead (double buffer)
+    graft: bool = False           # cross-tree forest grafting (core/forest)
+    min_graft: int = 16           # min shared-prefix tokens worth a graft
 
 
 @dataclass
@@ -84,6 +102,8 @@ class FitTree:
     paths: list[dict]             # linearize_paths() output
     n_unique: int
     src: int                      # source generator batch (step index)
+    n_src: int = 1                # source trees this entry represents
+    lam_map: Optional[dict] = None  # grafted forest: id(node) → λ
 
 
 @dataclass
@@ -93,13 +113,16 @@ class OversizedTree:
     tree: TrajectoryTree
     src: int
     parts: Optional[list[TreePartition]] = None
+    n_src: int = 1                # source trees (grafted forests > 1)
+    lam_map: Optional[dict] = None  # grafted forest: id(node) → λ
 
     def forest(self, capacity: int, chunk: Optional[int],
                loss_mode: str) -> list[TreePartition]:
         if self.parts is None:
             self.parts = partition_tree(self.tree, capacity,
                                         chunk_size=chunk,
-                                        loss_mode=loss_mode)
+                                        loss_mode=loss_mode,
+                                        lam_map=self.lam_map)
         return self.parts
 
     def load(self, capacity: int, chunk: Optional[int],
@@ -133,6 +156,87 @@ def _fit_split(trees: Sequence[TrajectoryTree], seq_len: int,
         else:
             over.append(OversizedTree(tree=t, src=src))
     return keep, over
+
+
+def _graft_fits(fits: list[FitTree], lc: LoaderConfig, pc: PlannerConfig,
+                chunk: Optional[int], cap: int
+                ) -> tuple[list[FitTree], list[OversizedTree]]:
+    """Cross-tree forest grafting over the window's row-sized trees
+    (``core/forest``): merge shared heads so each cross-tree prefix is
+    computed once per window.  Every candidate is gated by the cost
+    model's dedup term (``plan_cost.graft_gain`` on serialized, i.e.
+    chunk-padded, lengths) — a losing graft falls back to its sources
+    untouched.  A winning graft that no longer fits a packed row routes
+    to Redundancy-Free Tree Partitioning like any oversized tree, its
+    λ map and source count riding along.
+
+    Oversized candidates are refined by recursive bisection: any
+    consecutive slice of a graft group still shares the ≥ ``min_graft``
+    prefix (groups are maximal runs in member-sorted order), so a group
+    whose merged forest overflows the row is split in half and re-grafted
+    whenever the halves' summed gain beats the whole — trading a little
+    prefix redundancy (the prefix is computed once per slice) for
+    row-sized forests that pack without partition-wave padding."""
+
+    def gain_of(srcs: list[int], ser_n: int,
+                parts: Optional[int] = None) -> float:
+        return graft_gain(sum(fits[i].ser.n for i in srcs), ser_n,
+                          lc.seq_len, cap, pc.weights, parts=parts)
+
+    def plan_slice(srcs: list[int]) -> tuple[float, list]:
+        """Best placement of a consecutive member slice: (gain,
+        placements), a placement being a passthrough fit index or a
+        (graft, ser, window-indices) triple."""
+        if len(srcs) == 1:
+            return 0.0, [srcs[0]]
+        gs, ps = graft_trees([fits[i].tree for i in srcs],
+                             loss_mode=lc.loss_mode,
+                             min_graft=pc.min_graft)
+        gain_tot: float = 0.0
+        placed: list = [srcs[j] for j in ps]
+        for g2 in gs:
+            gsrcs = [srcs[j] for j in g2.srcs]
+            ser = serialize_tree(g2.tree, chunk_size=chunk,
+                                 lam_map=g2.lam_map)
+            parts = (len(partition_tree(g2.tree, cap, chunk_size=chunk,
+                                        lam_map=g2.lam_map))
+                     if ser.n > lc.seq_len else None)
+            whole = gain_of(gsrcs, ser.n, parts)
+            best: tuple[float, list] = ((whole, [(g2, ser, gsrcs)])
+                                        if whole > 0 else (0.0, gsrcs))
+            if ser.n > lc.seq_len and len(gsrcs) >= 2:
+                mid = len(gsrcs) // 2
+                gl, pl = plan_slice(gsrcs[:mid])
+                gr, pr = plan_slice(gsrcs[mid:])
+                if gl + gr > best[0]:
+                    best = (gl + gr, pl + pr)
+            gain_tot += best[0]
+            placed += best[1]
+        return gain_tot, placed
+
+    grafts, passthrough = graft_trees(
+        [f.tree for f in fits], loss_mode=lc.loss_mode,
+        min_graft=pc.min_graft)
+    out = [fits[i] for i in passthrough]
+    over: list[OversizedTree] = []
+    for g in grafts:
+        _, placed = plan_slice(g.srcs)
+        for p in placed:
+            if isinstance(p, int):
+                out.append(fits[p])
+                continue
+            g2, ser, gsrcs = p
+            src = min(fits[i].src for i in gsrcs)
+            n_src = sum(fits[i].n_src for i in gsrcs)
+            if ser.n <= lc.seq_len:
+                out.append(FitTree(tree=g2.tree, ser=ser, paths=[],
+                                   n_unique=int(ser.valid.sum()), src=src,
+                                   n_src=n_src, lam_map=g2.lam_map))
+            else:
+                over.append(OversizedTree(tree=g2.tree, src=src,
+                                          n_src=n_src,
+                                          lam_map=g2.lam_map))
+    return out, over
 
 
 def _assign_window(sizes: Sequence[int], num_steps: int, rows_per_step: int,
@@ -279,13 +383,17 @@ class PlannedStep:
     oversized: list[OversizedTree] = field(default_factory=list)
     dropped: int = 0
     cost: Optional[PackingCost] = None
+    capacity: Optional[int] = None    # resolved partition cap (auto mode)
     baseline_tb: Any = None           # baseline mode pre-packs paths
     _sb: Optional[StepBatch] = None
     _plan: Any = None
 
     @property
     def num_trees(self) -> int:
-        return len(self.fits) + len(self.oversized)
+        # SOURCE trees, not schedule entries: a grafted forest carries
+        # n_src members and the loss stays a mean over source trees
+        return (sum(f.n_src for f in self.fits)
+                + sum(o.n_src for o in self.oversized))
 
     @property
     def is_empty(self) -> bool:
@@ -313,8 +421,10 @@ class PlannedStep:
             loads = [sum(self.fits[i].ser.n for i in r) for r in rows]
             order = balanced_row_order(loads, pc.num_replicas)
             rows = [rows[r] for r in order]
-            tb = materialize_tree_rows([f.ser for f in self.fits], rows,
-                                       lc.seq_len, chunk_size=chunk)
+            tb = materialize_tree_rows(
+                [f.ser for f in self.fits], rows, lc.seq_len,
+                chunk_size=chunk,
+                tree_counts=[f.n_src for f in self.fits])
         inputs = None
         if tb is not None:
             extra = None
@@ -344,7 +454,7 @@ class PlannedStep:
 
         cfg, lc, pc = self.cfg, self.lc, self.pc
         chunk = cfg.ssm.chunk_size if needs_chunks(cfg) else None
-        cap = lc.capacity or lc.seq_len
+        cap = self.capacity or lc.capacity or lc.seq_len
         sb = self.step_batch()
         packed = None
         if sb.inputs is not None:
@@ -404,13 +514,26 @@ def plan_window(cfg: ModelConfig, lc: LoaderConfig, pc: PlannerConfig,
         fits.extend(f)
         over.extend(o)
 
-    steps = [PlannedStep(cfg=cfg, lc=lc, pc=pc, index=first_index + s)
+    if pc.graft and lc.mode == "tree" and len(fits) > 1:
+        fits, grafted_over = _graft_fits(fits, lc, pc, chunk, cap)
+        over = over + grafted_over
+
+    if (lc.auto_capacity and lc.capacity is None and route and over):
+        # planner-chosen partition capacity, resolved once per window so
+        # load balancing and wave building agree (PlannedStep.capacity)
+        cap = choose_capacity([o.tree for o in over], lc.seq_len,
+                              chunk_size=chunk)
+
+    steps = [PlannedStep(cfg=cfg, lc=lc, pc=pc, index=first_index + s,
+                         capacity=cap)
              for s in range(W)]
 
     if lc.mode == "tree":
         steps_rows, evicted, cost = _schedule_tree_window(
             fits, W, rows_per_step, lc.seq_len, cache, pc)
-        over = over + [OversizedTree(tree=fits[i].tree, src=fits[i].src)
+        over = over + [OversizedTree(tree=fits[i].tree, src=fits[i].src,
+                                     n_src=fits[i].n_src,
+                                     lam_map=fits[i].lam_map)
                        for i in evicted]
         for s in range(W):
             placed = sorted({i for r in steps_rows[s] for i in r})
@@ -457,7 +580,7 @@ def plan_window(cfg: ModelConfig, lc: LoaderConfig, pc: PlannerConfig,
                 loads[s] += o.load(cap, chunk, lc.loss_mode)
     else:
         for o in over:
-            steps[o.src - first_index].dropped += 1
+            steps[o.src - first_index].dropped += o.n_src
     return steps
 
 
