@@ -32,14 +32,27 @@ the same rows as a JSON artifact for CI:
                      group's prefix computed exactly once), generation
                      overlap fraction behind training, bounded staleness,
                      zero dropped trees
+  compile_warmup     runtime level — AOT warmup engine (train/warmup):
+                     cold vs warm step-1 latency, retrace count (0 after
+                     universe warmup on an in-universe stream), exposed
+                     compile wait fraction, and persistent-compile-cache
+                     restart (second process writes 0 new cache modules);
+                     each timed step also emits a CostWeights calibration
+                     sample into the --out artifact
 
 Flags:
   --smoke      tiny qwen1.5-0.5B-scale config, CPU-interpret friendly,
-               finishes in well under 2 min — the CI benchmark gate
+               finishes in a few minutes — the CI benchmark gate (the
+               compile_warmup row's cold-compile baseline and restart
+               probes are inherently compile-bound)
   --impl X     attention impl for the model-level benches (ref/chunked/
                pallas); model benches default to ref, kernel benches
                always exercise the Pallas op
   --out F      write rows + environment metadata as JSON
+  --calibrate F
+               fit CostWeights from a previous --out artifact's
+               calib_samples (least squares, pad-normalized) and print
+               the ``CostWeights(...)`` literal; runs no benchmarks
 """
 from __future__ import annotations
 
@@ -68,6 +81,10 @@ from repro.data.synthetic import (agentic_tree,  # noqa: E402
 from repro.models.model import init_params  # noqa: E402
 
 ROWS: list[dict] = []
+# cost-model calibration samples: one dict per timed compile_warmup step
+# (wall seconds + CostWeights features) — written into the --out artifact
+# and consumed by ``--calibrate`` to least-squares-fit CostWeights
+CALIB: list[dict] = []
 
 
 def emit(name: str, us: float, derived: str) -> None:
@@ -746,6 +763,138 @@ def bench_smoke_model(impl: str) -> None:
 # shardlint byte table — audited per-step collective wire bytes
 # ---------------------------------------------------------------------------
 
+def bench_compile_warmup(smoke: bool = False, impl: str = "ref") -> None:
+    """AOT warmup engine (train/warmup): the compile economics of one
+    training stream, cold vs warm.
+
+      cold   the engine's executable cache starts empty: every first-seen
+             signature pays a synchronous ``lower().compile()`` inside
+             the step it lands in (counted as a retrace + exposed wait);
+      warm   a fresh cache is filled by ``AOTWarmupService.warm_all`` —
+             the signature universe ordered by ``CompileCacheSim`` hit
+             frequency, budgeted to the stream's hot set — before the
+             first step runs: the same stream must then replay with ZERO
+             retraces and zero exposed compile wait;
+      restart  ``python -m repro.train.warmup --persist-probe`` twice in
+             fresh subprocesses against one persistent jax compilation
+             cache dir: the second process must write 0 new cache files.
+
+    Every cold/warm step also contributes a calibration sample
+    (wall time + cost-model features) to the ``--out`` artifact;
+    ``--calibrate`` least-squares-fits CostWeights from them."""
+    import shutil
+    import subprocess
+    import tempfile
+
+    from repro.analysis.signatures import step_signatures
+    from repro.core.plan_cost import CompileCacheSim
+    from repro.data.loader import LoaderConfig
+    from repro.train.engine import TreeTrainEngine
+    from repro.train.exec_cache import ExecutableCache
+    from repro.train.optimizer import OptimizerConfig, init_opt_state
+    from repro.train.planner import (PlannerConfig, plan_stream,
+                                     planned_step_features)
+    from repro.train.warmup import AOTWarmupService
+
+    # dims distinct from every other bench in this process so the cold
+    # pass pays GENUINE XLA compiles (the in-process compilation cache
+    # would otherwise hit on an HLO an earlier bench already built)
+    cfg = (bench_model(n_layers=2, d_model=32, vocab=512) if smoke
+           else bench_model(n_layers=3, d_model=64))
+    S, C, steps = (128, 64, 2) if smoke else (384, 192, 5)
+    lc = LoaderConfig(seq_len=S, batch_rows=2, trees_per_batch=2,
+                      mode="tree", kind="template", seed=23,
+                      auto_partition=True, capacity=C,
+                      gen_kwargs=dict(num_templates=1,
+                                      template_len=S // 4, num_turns=2,
+                                      turn_len_range=(S // 8, S // 4)))
+    pc = PlannerConfig(lookahead=2)
+    opt_cfg = OptimizerConfig(lr=1e-3, warmup_steps=2, total_steps=steps)
+    params = init_params(cfg, jax.random.key(1))
+    pss = list(plan_stream(cfg, lc, steps, pc))
+
+    def run_stream(engine) -> tuple[list, float]:
+        p, opt = params, init_opt_state(params)
+        walls = []
+        for ps in pss:
+            plan = ps.execution_plan()
+            sig0 = set(engine.exec_cache.signatures())
+            t0 = time.perf_counter()
+            p, opt, _ = engine.step(p, opt, plan)
+            dt = time.perf_counter() - t0
+            walls.append(dt)
+            new = engine.exec_cache.signatures() - sig0
+            feats = planned_step_features(ps)
+            CALIB.append(dict(
+                wall_s=dt, padded_tokens=feats["padded_tokens"],
+                live_blocks=feats["live_blocks"], block=pc.block,
+                new_packed_sigs=len([s for s in new
+                                     if s[0] == "packed"]),
+                new_wave_sigs=len([s for s in new if s[0] == "wave"])))
+        return walls, sum(walls)
+
+    # ---- cold: first-seen signatures compile synchronously in-step
+    eng_c = TreeTrainEngine(cfg, opt_cfg, impl=impl, donate=False,
+                            exec_cache=ExecutableCache())
+    cold_walls, cold_wall = run_stream(eng_c)
+    assert eng_c.retraces > 0, "cold baseline saw no compiles"
+    assert eng_c.compile_wait_s > 0
+
+    # ---- warm: universe warmup (hit-frequency-ordered, budgeted to the
+    # stream's hot set) into a FRESH executable cache, then replay
+    sim = CompileCacheSim()
+    for ps in pss:
+        sim.commit(step_signatures(ps))
+    waves = [s for s in sim.seen if s[0] == "wave"]
+    caps = [max((s[i] for s in waves), default=0) for i in (3, 4, 5, 6)]
+    svc = AOTWarmupService(cfg, lc, pc, params=params, opt_cfg=opt_cfg,
+                           impl=impl, donate=False, sim=sim, caps=caps,
+                           max_compiles=2 * (len(sim.seen) + 1))
+    t0 = time.perf_counter()
+    svc.warm_all()
+    warmup_s = time.perf_counter() - t0
+    assert not svc.errors, svc.errors[:3]
+    eng_w = TreeTrainEngine(cfg, opt_cfg, impl=impl, donate=False,
+                            exec_cache=svc.cache, universe=svc.universe)
+    warm_walls, warm_wall = run_stream(eng_w)
+    wait_frac = eng_w.compile_wait_s / max(warm_wall, 1e-9)
+    assert eng_w.retraces == 0, \
+        f"{eng_w.retraces} retraces after universe warmup"
+    assert wait_frac < 0.05, \
+        (f"exposed compile wait {wait_frac:.1%} of wall "
+         f"(cold baseline: "
+         f"{eng_c.compile_wait_s / max(cold_wall, 1e-9):.1%})")
+
+    # ---- restart: persistent compile cache across fresh processes
+    cache_dir = tempfile.mkdtemp(prefix="jax-compile-cache-")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.setdefault("TF_CPP_MIN_LOG_LEVEL", "3")
+    env.pop("XLA_FLAGS", None)
+    probes = []
+    for _ in range(2):
+        r = subprocess.run([sys.executable, "-m", "repro.train.warmup",
+                            "--persist-probe", cache_dir], env=env,
+                           capture_output=True, text=True, timeout=600)
+        assert r.returncode == 0, r.stderr[-2000:]
+        probes.append(json.loads(r.stdout.strip().splitlines()[-1]))
+    shutil.rmtree(cache_dir, ignore_errors=True)
+    assert probes[0]["new_cache_files"] > 0, probes[0]
+    assert probes[1]["new_cache_files"] == 0, \
+        f"warm restart recompiled {probes[1]['new_cache_files']} modules"
+    assert probes[1]["loss"] == probes[0]["loss"], probes
+
+    emit("compile_warmup", cold_walls[0] * 1e6,
+         f"warm_step1_us={warm_walls[0] * 1e6:.1f} "
+         f"cold_retraces={eng_c.retraces} warm_retraces=0 "
+         f"cold_wait_ms={eng_c.compile_wait_s * 1e3:.0f} "
+         f"warm_wait_frac={wait_frac:.3f} warmup_s={warmup_s:.1f} "
+         f"aot_executables={len(svc.cache)} "
+         f"restart_new_modules={probes[1]['new_cache_files']} "
+         f"restart_warmup_speedup="
+         f"{probes[0]['compile_s'] / max(probes[1]['compile_s'], 1e-9):.1f}x")
+
+
 def bench_comms_table() -> None:
     """shardlint's fast host-mesh audit (``lint --comms --fast``) in a
     subprocess — fake devices need ``XLA_FLAGS`` set before jax
@@ -782,6 +931,46 @@ def bench_comms_table() -> None:
          f"decode_step_wire_bytes={dec} findings=0")
 
 
+def calibrate(path: str) -> None:
+    """Least-squares-fit :class:`~repro.core.plan_cost.CostWeights` from a
+    nightly artifact's ``calib_samples`` (written by ``compile_warmup``).
+
+    Model per timed engine step::
+
+        wall_s ≈ a·padded_tokens + b·new_packed_sigs + c·new_wave_sigs
+                 + d·live_blocks·block² + e
+
+    then normalize by the pad coefficient (``score_packing`` is scale-free
+    — only the RATIOS steer the planner) and print a ``CostWeights(...)``
+    literal to paste into ``core/plan_cost.py`` or pass programmatically."""
+    with open(path) as fh:
+        art = json.load(fh)
+    samples = art.get("calib_samples") or []
+    if len(samples) < 5:
+        sys.exit(f"calibrate: need >= 5 calib_samples, artifact at {path} "
+                 f"has {len(samples)} — run benchmarks with --out first")
+    X = np.array([[s["padded_tokens"],
+                   s["new_packed_sigs"],
+                   s["new_wave_sigs"],
+                   s["live_blocks"] * s["block"] ** 2,
+                   1.0] for s in samples])
+    y = np.array([s["wall_s"] for s in samples])
+    coef, *_ = np.linalg.lstsq(X, y, rcond=None)
+    resid = y - X @ coef
+    ss_tot = float(((y - y.mean()) ** 2).sum()) or 1.0
+    r2 = 1.0 - float((resid ** 2).sum()) / ss_tot
+    # a compile class the samples never exercised can come out slightly
+    # negative from noise — clamp: costs are non-negative by construction
+    pad, miss, wave, live = (max(float(c), 0.0) for c in coef[:4])
+    if pad <= 0:
+        sys.exit("calibrate: pad coefficient fit <= 0 — samples do not "
+                 "vary padded_tokens enough to normalize against")
+    print(f"# fit from {len(samples)} samples, R^2={r2:.3f} "
+          f"(backend={art.get('backend')}, impl={art.get('impl')})")
+    print(f"CostWeights(pad=1.0, compile_miss={miss / pad:.1f}, "
+          f"wave_compile={wave / pad:.1f}, live_block={live / pad:.4f})")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -791,7 +980,14 @@ def main(argv=None) -> None:
                     help="attention impl for model-level benches")
     ap.add_argument("--out", default=None,
                     help="write rows as a JSON artifact to this path")
+    ap.add_argument("--calibrate", metavar="NIGHTLY_JSON", default=None,
+                    help="fit CostWeights from a benchmark artifact's "
+                         "calib_samples and print the literal; runs no "
+                         "benchmarks")
     args = ap.parse_args(argv)
+    if args.calibrate:
+        calibrate(args.calibrate)
+        return
     if args.out:
         parent = os.path.dirname(os.path.abspath(args.out))
         if not os.path.isdir(parent):
@@ -809,6 +1005,7 @@ def main(argv=None) -> None:
         bench_plan_efficiency(smoke=True, impl=args.impl)
         bench_cross_tree_reuse(smoke=True, impl=args.impl)
         bench_rl_service(smoke=True, impl=args.impl)
+        bench_compile_warmup(smoke=True, impl=args.impl)
         bench_comms_table()
     else:
         bench_por_sweep(args.impl)
@@ -824,6 +1021,7 @@ def main(argv=None) -> None:
         bench_plan_efficiency(impl=args.impl)
         bench_cross_tree_reuse(impl=args.impl)
         bench_rl_service(impl=args.impl)
+        bench_compile_warmup(impl=args.impl)
         bench_comms_table()
     if args.out:
         artifact = {
@@ -833,6 +1031,7 @@ def main(argv=None) -> None:
             "jax_version": jax.__version__,
             "wall_s": round(time.perf_counter() - t0, 2),
             "rows": ROWS,
+            "calib_samples": CALIB,
         }
         with open(args.out, "w") as f:
             json.dump(artifact, f, indent=2)

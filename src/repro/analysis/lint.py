@@ -62,6 +62,66 @@ def _engine_host_transfer_findings() -> list:
     return []
 
 
+def _warmup_crosscheck(cfg, lc, pc, sig_reps) -> tuple[list, dict]:
+    """Pass 6: the AOT warmup compile list IS the signature universe.
+
+    ``train/warmup.universe_signatures`` (the list the warmup service
+    compiles) and ``SignatureUniverse.enumerate_signatures`` (the list
+    this auditor proves reachable) are deliberately independent
+    implementations; they must agree EXACTLY — no live signature left
+    silently unprecompiled, no dead bucket compiled — every enumerated
+    signature must pass ``contains``, and every signature the planner
+    replay actually emitted must be on the list.  Pure host enumeration:
+    nothing traces or compiles, so the fast gate stays fast."""
+    from repro.analysis.jaxpr_audit import Finding
+    from repro.analysis.signatures import SignatureUniverse
+    from repro.train.warmup import universe_signatures
+
+    caps = [max(r["observed_caps"][i] for r in sig_reps)
+            for i in range(4)]
+    universe = SignatureUniverse(
+        seq_len=lc.seq_len, batch_rows=lc.batch_rows,
+        num_replicas=pc.num_replicas,
+        max_rows=(pc.max_rows if pc.max_rows is not None
+                  else lc.batch_rows),
+        capacity=lc.capacity or lc.seq_len)
+    enum = universe.enumerate_signatures(*caps)
+    warm = universe_signatures(lc, pc, caps)
+    findings: list = []
+    tgt = f"{cfg.name}:warmup"
+    miss = set(enum) - set(warm)
+    extra = set(warm) - set(enum)
+    if miss or extra:
+        findings.append(Finding(
+            tgt, "aot-universe",
+            f"warmup compile list != enumerated universe: "
+            f"{len(miss)} signature(s) would go unprecompiled "
+            f"(e.g. {sorted(map(str, miss))[:2]}), {len(extra)} dead "
+            f"bucket(s) would compile (e.g. "
+            f"{sorted(map(str, extra))[:2]})"))
+    dead = [s for s in enum if not universe.contains(s)[0]]
+    if dead:
+        findings.append(Finding(
+            tgt, "aot-universe",
+            f"{len(dead)} enumerated signature(s) fail "
+            f"universe.contains (e.g. {sorted(map(str, dead))[:2]}) — "
+            f"the enumeration escaped its own membership test"))
+    on_list = {str(s) for s in enum}
+    observed = set().union(*({s for s in r["distinct"]}
+                             for r in sig_reps))
+    off = sorted(observed - on_list)
+    if off:
+        findings.append(Finding(
+            tgt, "aot-universe",
+            f"{len(off)} planner-observed signature(s) missing from the "
+            f"warmup compile list (e.g. {off[:2]}) — the engine would "
+            f"hit the synchronous slow path mid-training"))
+    report = {"caps": caps, "compile_list": len(warm),
+              "enumerated": len(enum), "observed": len(observed),
+              "findings": len(findings)}
+    return findings, report
+
+
 def run_lint(archs, *, impl: str = "ref", lookahead: int = 2,
              fast: bool = True, verbose: bool = True) -> tuple[list, dict]:
     from dataclasses import replace
@@ -104,19 +164,26 @@ def run_lint(archs, *, impl: str = "ref", lookahead: int = 2,
                                           trees_per=lc.trees_per_batch)
         gsig_f, gsig_rep = signatures.lint_signatures(cfg, lc, pcg, gsrc)
         findings += gsig_f
+        # warmup cross-check: the AOT warmup service's compile list must
+        # equal the enumerated universe (and cover everything observed)
+        wu_f, wu_rep = _warmup_crosscheck(cfg, lc, pc,
+                                          [sig_rep, gsig_rep])
+        findings += wu_f
         report["archs"][arch] = {
             "targets": [t.name for t in targets],
             "jaxpr_findings": len(arch_f),
             "signatures": sig_rep,
             "graft_signatures": gsig_rep,
+            "warmup": wu_rep,
             "seconds": round(time.perf_counter() - t0, 2),
         }
         say(f"{arch}: {len(targets)} entrypoints audited, "
             f"{sig_rep['signatures_distinct']} distinct jit signatures "
             f"(AOT universe {sig_rep['aot_universe_size']}, "
-            f"+{gsig_rep['signatures_distinct']} grafted), "
-            f"{len(arch_f) + len(sig_f) + len(gsig_f)} findings "
-            f"[{report['archs'][arch]['seconds']}s]")
+            f"+{gsig_rep['signatures_distinct']} grafted, warmup list "
+            f"{wu_rep['compile_list']}), "
+            f"{len(arch_f) + len(sig_f) + len(gsig_f) + len(wu_f)} "
+            f"findings [{report['archs'][arch]['seconds']}s]")
 
     cov = [jaxpr_audit.Finding("registry", "coverage", m)
            for m in coverage_findings(all_targets)]

@@ -27,8 +27,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.gateway import (_cut_caps_view, _names_sig, _slice_gw_row,
-                                _stack_gw_rows, assemble_child_gw)
 from repro.data.loader import LoaderConfig
 from repro.data.synthetic import random_tree
 from repro.models.model import needs_chunks
@@ -168,15 +166,9 @@ def comm_coverage_findings(targets: list["AuditTarget"]) -> list[str]:
 # Abstract-input builders
 # ---------------------------------------------------------------------------
 
-def abstractify(x):
-    """Pytree of arrays/np scalars → ShapeDtypeStructs (non-array leaves
-    pass through: python ints become weak-typed traced scalars, matching
-    what a real dispatch traces)."""
-    def one(leaf):
-        if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
-            return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype)
-        return leaf
-    return jax.tree.map(one, x)
+# abstractify moved to train/exec_cache (the runtime shares it with the
+# warmup service); re-exported here for the existing audit callers
+from repro.train.exec_cache import abstractify  # noqa: E402,F401
 
 
 def _f32_like(tree):
@@ -293,59 +285,36 @@ def _engine_targets(cfg: ModelConfig, impl: str, plan, params_a,
 
 def _wave_targets(cfg: ModelConfig, impl: str, partition, params_a,
                   acc_a, scal_a, scale_a) -> list[AuditTarget]:
-    """Replay run_partition_plan's forward sweep entirely under
-    ``jax.eval_shape`` — each wave's gateway/captures stay abstract — and
-    emit one (fwd, bwd) target pair per distinct wave shape signature."""
-    plan = partition
-    st: list[dict] = []          # per wave: {"caps": sds, "gw": sds|None}
+    """One (fwd, bwd) target pair per distinct wave shape signature,
+    from ``train/warmup.abstract_wave_io`` — the shared ``jax.eval_shape``
+    replay of run_partition_plan's forward sweep that the AOT warmup
+    service also pre-warms from (one replay, two consumers: what the
+    auditor proves is exactly what warmup compiles)."""
+    from repro.train.warmup import abstract_wave_io
+
     targets: list[AuditTarget] = []
     seen: set = set()
-    for w, wp in enumerate(plan.waves):
-        batch_a = abstractify(wp.batch)
-        caps_a = abstractify(wp.capspecs)
-        gw_a = None
-        if wp.has_gw:
-            def mk_gw(prev, _wp=wp, _ba=batch_a):
-                rows_gw = []
-                for ref in _wp.parents:
-                    stp, pwp = prev[ref.wave], plan.waves[ref.wave]
-                    cname = f"c{ref.cut}"
-                    p_gw_row = (None if stp["gw"] is None else
-                                _slice_gw_row(stp["gw"], ref.row,
-                                              pwp.A_real[ref.row]))
-                    caps_view = _cut_caps_view(cfg, stp["caps"], cname,
-                                               ref.row, ref.path_len)
-                    rows_gw.append(
-                        assemble_child_gw(cfg, p_gw_row, caps_view,
-                                          cname))
-                return _stack_gw_rows(rows_gw, _wp.anc_A_max,
-                                      _ba["tokens"].shape[0],
-                                      rows_idx=_wp.slot_rows)
-            gw_a = jax.eval_shape(mk_gw, st)
-        fwd, bwd = _wave_exec_fns(cfg, _names_sig(wp.capspecs), impl,
-                                  wp.has_gw, True)
-        caps_out, _ = jax.eval_shape(fwd, params_a, batch_a, gw_a,
-                                     caps_a, scal_a, scale_a)
+    for io in abstract_wave_io(cfg, partition, params_a, impl=impl,
+                               donate=True):
+        wp = io["wp"]
+        batch_a = io["fwd_args"][1]
         sig = (wp.has_gw, batch_a["tokens"].shape, wp.anc_A_max,
                len(wp.capspecs))
-        if sig not in seen:
-            seen.add(sig)
-            tag = f"{cfg.name}:engine.wave{w}" + ("+gw" if wp.has_gw
-                                                  else "")
-            cot_a = (scale_a, caps_out)
-            targets.append(AuditTarget(
-                name=tag + ".fwd", fn=fwd,
-                args=(params_a, batch_a, gw_a, caps_a, scal_a, scale_a),
-                contract=Contract(donate=(4,), keep=(0,),
-                                  fp32_args=(4,), fp32_outs=(1,)),
-                covers=("repro/train/engine.py::_wave_exec_fns",)))
-            targets.append(AuditTarget(
-                name=tag + ".bwd", fn=bwd,
-                args=(params_a, batch_a, gw_a, caps_a, cot_a, acc_a),
-                contract=Contract(donate=(5,), keep=(0,),
-                                  fp32_args=(5,), fp32_outs=(0,)),
-                covers=("repro/train/engine.py::_wave_exec_fns",)))
-        st.append(dict(caps=caps_out, gw=gw_a))
+        if sig in seen:
+            continue
+        seen.add(sig)
+        tag = f"{cfg.name}:engine.wave{io['w']}" + ("+gw" if wp.has_gw
+                                                    else "")
+        targets.append(AuditTarget(
+            name=tag + ".fwd", fn=io["fwd"], args=io["fwd_args"],
+            contract=Contract(donate=(4,), keep=(0,),
+                              fp32_args=(4,), fp32_outs=(1,)),
+            covers=("repro/train/engine.py::_wave_exec_fns",)))
+        targets.append(AuditTarget(
+            name=tag + ".bwd", fn=io["bwd"], args=io["bwd_args"],
+            contract=Contract(donate=(5,), keep=(0,),
+                              fp32_args=(5,), fp32_outs=(0,)),
+            covers=("repro/train/engine.py::_wave_exec_fns",)))
     return targets
 
 

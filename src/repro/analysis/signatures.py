@@ -22,24 +22,15 @@ from dataclasses import dataclass
 from typing import Hashable, Iterable, Optional
 
 from repro.core.plan_cost import (CompileCacheSim, packed_signature, pow2,
-                                  round_to_multiple, wave_signature)
+                                  round_to_multiple, wave_signature,
+                                  wave_signature_of)
+
+__all__ = ["wave_signature_of", "step_signatures", "SignatureUniverse",
+           "lint_signatures", "synthetic_source", "template_source"]
 
 
 def _is_pow2(n: int) -> bool:
     return n > 0 and (n & (n - 1)) == 0
-
-
-def wave_signature_of(wp, seq_len: int) -> Hashable:
-    """The jit signature one WavePlan dispatches: every field is a shape
-    the engine's ``_wave_exec_fns`` cache keys on (bucketed rows,
-    ancestor pad, capspec count/path pad, boundary-extra pad)."""
-    ncut = len(wp.capspecs)
-    plen = (len(next(iter(wp.capspecs.values()))["path_idx"])
-            if ncut else 0)
-    n_extra = (wp.batch["extra_pos"].shape[1]
-               if "extra_pos" in wp.batch else 0)
-    return wave_signature(wp.batch["tokens"].shape[0], seq_len,
-                         wp.anc_A_max, ncut, plen, n_extra)
 
 
 def step_signatures(ps) -> list[Hashable]:
@@ -112,8 +103,10 @@ class SignatureUniverse:
 
     def count(self, anc_cap: int, ncut_cap: int, plen_cap: int,
               extra_cap: int) -> int:
-        """Signatures an AOT warmup would precompile, bounded by observed
-        maxima: 1 packed + every wave bucket combination."""
+        """Bounding-box size of the universe under observed per-field
+        maxima: 1 packed + every wave bucket combination.  An upper bound
+        on — and sanity check for — :meth:`enumerate_signatures`, which
+        is the exact list the AOT warmup service compiles."""
         def nopts(cap: int, lo: int = 1) -> int:
             n, b = 1, lo                       # the 0 bucket
             while b <= cap:
@@ -126,6 +119,58 @@ class SignatureUniverse:
             rows_opts, b = rows_opts + 1, b * 2
         return 1 + (rows_opts * nopts(anc_cap, 8) * nopts(ncut_cap)
                     * nopts(plen_cap) * nopts(extra_cap))
+
+    def _buckets(self, cap: int, lo: int = 1) -> list[int]:
+        out, b = [0], lo
+        while b <= cap:
+            out.append(b)
+            b *= 2
+        return out
+
+    def enumerate_signatures(self, anc_cap: int, ncut_cap: int,
+                             plen_cap: int, extra_cap: int
+                             ) -> list[Hashable]:
+        """THE AOT compile list: every *live* signature in the universe,
+        bounded by observed (or configured) per-field caps.  ``count``
+        is the loose bounding-box upper bound; this enumeration drops the
+        structurally dead corners a real planner run can never emit, so
+        the warmup service compiles no dead bucket:
+
+          - ``ncut == 0`` ⟺ ``plen == 0`` ⟺ ``n_extra == 0`` — the
+            capture plans drive both the path pad and the boundary-extra
+            columns, so the three vanish together (a leaf wave);
+          - ``anc == 0 ⇒ ncut ≥ 1`` — a root wave comes from partitioning
+            an oversized tree (≥ 2 fragments), so its fragments always
+            cut to children; a wave with neither gateway nor cuts would
+            be a row-sized tree, which packs instead;
+          - ``n_extra ≤ ncut`` — per-row boundary extras are bucketed
+            from per-row cut counts, never exceeding the wave total.
+
+        Every returned signature passes :meth:`contains`;
+        ``len(result) ≤ count(same caps)``."""
+        sigs: list[Hashable] = [packed_signature(self.packed_rows,
+                                                 self.seq_len)]
+        R = max(self.num_replicas, 1)
+        rows_list, b = [], R
+        while b <= self.max_wave_rows:
+            rows_list.append(b)
+            b *= 2
+        plen_cap = min(plen_cap, pow2(self.capacity))
+        for rows in rows_list:
+            for anc in self._buckets(anc_cap, lo=8):
+                for ncut in self._buckets(ncut_cap):
+                    if ncut == 0:
+                        if anc > 0:     # leaf wave: gateway in, no cuts
+                            sigs.append(wave_signature(
+                                rows, self.seq_len, anc, 0, 0, 0))
+                        continue
+                    for plen in self._buckets(plen_cap)[1:]:
+                        for n_extra in self._buckets(
+                                min(extra_cap, ncut))[1:]:
+                            sigs.append(wave_signature(
+                                rows, self.seq_len, anc, ncut, plen,
+                                n_extra))
+        return sigs
 
 
 def lint_signatures(cfg, lc, pc, source,
@@ -170,7 +215,9 @@ def lint_signatures(cfg, lc, pc, source,
         "distinct": distinct,
         "compile_misses": len(sim.seen),
         "out_of_universe": len(findings),
+        "observed_caps": list(caps),
         "aot_universe_size": universe.count(*caps),
+        "aot_compile_list": len(universe.enumerate_signatures(*caps)),
     }
     return findings, report
 

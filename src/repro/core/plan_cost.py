@@ -14,11 +14,16 @@ row) so they add meaningfully:
   padded tokens      every materialized row cell that holds no valid
                      token still costs HBM traffic and (partially) MXU
                      work — the paper's padded-vs-unique overhead;
-  compile-cache miss a packed shape signature the jit cache has not seen
+  compile-cache miss a shape signature the jit cache has not seen
                      triggers a trace+lower+compile stall, amortized here
-                     as ``compile_miss`` token-cells per new signature
-                     (wave-shape signatures are not modeled yet — see
-                     ROADMAP open items);
+                     as ``compile_miss`` token-cells per new packed
+                     signature and ``wave_compile`` per new *wave* bucket
+                     (pow2 rows × ancestor × cut × path — waves dominate
+                     compile misses on oversized-heavy streams); with an
+                     AOT warmup service filling the executable cache
+                     ahead of time (``train/warmup``) the stall is hidden,
+                     so runs with ``--aot-warmup`` may calibrate these
+                     weights down (see ``benchmarks/run.py --calibrate``);
   live blocks        the tree-attention kernels skip KV blocks wholly
                      invisible to a query block (App. A.1), so attention
                      compute scales with the number of *live* blocks, not
@@ -105,16 +110,23 @@ def est_block_skip(row_sizes: Sequence[Sequence[int]], seq_len: int,
 
 class CompileCacheSim:
     """Host-side mirror of the jit signature cache: the planner charges a
-    candidate only for signatures the stream has not already compiled."""
+    candidate only for signatures the stream has not already compiled.
+
+    ``freq`` counts every commit per signature — the simulated hit
+    frequency the AOT warmup service (``train/warmup``) uses to order its
+    background compiles (hot buckets first)."""
 
     def __init__(self) -> None:
         self.seen: set[Hashable] = set()
+        self.freq: dict[Hashable, int] = {}
 
     def misses(self, sigs: Iterable[Hashable]) -> int:
         return len({s for s in sigs if s not in self.seen})
 
     def commit(self, sigs: Iterable[Hashable]) -> None:
-        self.seen.update(sigs)
+        for s in sigs:
+            self.seen.add(s)
+            self.freq[s] = self.freq.get(s, 0) + 1
 
 
 def packed_signature(n_rows: int, seq_len: int) -> Hashable:
@@ -132,11 +144,31 @@ def wave_signature(n_rows: int, seq_len: int, anc: int, n_cuts: int,
     return ("wave", n_rows, seq_len, anc, n_cuts, path_len, n_extra)
 
 
+def wave_signature_of(wp, seq_len: int) -> Hashable:
+    """The jit signature one ``core/gateway.WavePlan`` dispatches: every
+    field is a shape the engine's ``_wave_exec_fns`` cache keys on
+    (bucketed rows, ancestor pad, capspec count/path pad, boundary-extra
+    pad).  Shared by the engine's executable-cache lookup, the planner's
+    wave-aware compile charging and the signature lint — one definition,
+    three consumers."""
+    ncut = len(wp.capspecs)
+    plen = (len(next(iter(wp.capspecs.values()))["path_idx"])
+            if ncut else 0)
+    n_extra = (wp.batch["extra_pos"].shape[1]
+               if "extra_pos" in wp.batch else 0)
+    return wave_signature(wp.batch["tokens"].shape[0], seq_len,
+                          wp.anc_A_max, ncut, plen, n_extra)
+
+
 @dataclass(frozen=True)
 class CostWeights:
     """All weights are token-cells per unit of the component."""
     pad: float = 1.0             # per padded (invalid) token cell
-    compile_miss: float = 4096.0  # per new jit signature
+    compile_miss: float = 4096.0  # per new packed jit signature
+    wave_compile: float = 2048.0  # per new WAVE shape bucket (the wave
+    #                               fwd+bwd pair is a shorter trace than
+    #                               the fused packed step, but a miss
+    #                               still stalls the step it lands in)
     live_block: float = 0.25      # per live block, scaled by block²
     comm_byte: float = 0.0        # per audited collective wire byte
     graft_saved: float = 1.0      # credit per cross-tree deduped cell
@@ -182,10 +214,16 @@ def score_packing(
     padded = len(row_sizes) * seq_len - used
     live, causal = _packing_live_blocks(row_sizes, seq_len, block)
     skip = 1.0 - live / causal if causal else 0.0
-    sigs = list(signatures)
-    miss = cache.misses(sigs) if cache is not None else len(set(sigs))
+    new = ({s for s in signatures if s not in cache.seen}
+           if cache is not None else set(signatures))
+    miss = len(new)
+    compile_cost = sum(
+        weights.wave_compile if (isinstance(s, tuple) and s
+                                 and s[0] == "wave")
+        else weights.compile_miss
+        for s in new)
     total = (weights.pad * padded
-             + weights.compile_miss * miss
+             + compile_cost
              + weights.live_block * live * block * block
              + weights.comm_byte * comm_bytes)
     return PackingCost(padded_tokens=padded, used_tokens=used,

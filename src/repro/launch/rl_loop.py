@@ -109,6 +109,9 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--check-grads", action="store_true",
                     help="verify online vs offline RL gradients at exit")
+    ap.add_argument("--compile-cache-dir", default=None,
+                    help="persistent jax compilation cache: a restarted "
+                         "service re-loads its compiled modules from disk")
     ap.add_argument("--save", default=None)
     ap.add_argument("--ckpt-every", type=int, default=None)
     ap.add_argument("--resume", default=None)
@@ -146,6 +149,11 @@ def main() -> None:
                        max_ahead_steps=args.max_ahead, rollout=rc,
                        seed=args.seed)
 
+    if args.compile_cache_dir:
+        from repro.train.warmup import configure_compile_cache
+        d = configure_compile_cache(args.compile_cache_dir)
+        print(f"[rl] persistent compile cache: {d}")
+
     with sh.use_mesh(mesh, data_axes=daxes):
         params = init_params(cfg, jax.random.key(args.seed))
         opt_state = init_opt_state(params)
@@ -156,25 +164,44 @@ def main() -> None:
             done = int(load_meta(args.resume).get("steps", 0))
             print(f"[rl] resumed {args.resume} @ step {done}")
 
-        # warm every executable OUTSIDE the measured loop — the rollout
-        # prefill/decode-scan AND the packed train step + optimizer
-        # update (twice: the update retraces once its inputs switch to
-        # its own committed output layout) — so multi-second jit
-        # compiles neither starve the generator thread nor masquerade
-        # as exposed generation time
+        # warm every executable OUTSIDE the measured loop, through the
+        # AOT warmup service (train/warmup): a probe rollout window is
+        # planned and EVERY signature it produces — packed batch, all
+        # partition waves, optimizer update — is AOT-compiled into the
+        # executable cache the engine dispatches from (the hand-rolled
+        # predecessor warmed only the window's first step).  The rollout
+        # prefill/decode-scan warms as a side effect of generating the
+        # probe trees; mid-loop, the planner pipeline pre-warms each new
+        # step's exact executables on its build threads before the
+        # engine can consume it, so the loop never blocks on a compile.
+        from repro.core.plan_cost import CompileCacheSim
+        from repro.train.warmup import AOTWarmupService
+        warm = AOTWarmupService(cfg, lc, pcfg, params=params,
+                                opt_cfg=opt_cfg, opt_state=opt_state,
+                                impl=args.impl, sim=CompileCacheSim())
         wtrees = [rollout_group(cfg, params,
                                 np.zeros(args.prompt_len, np.int32) + g,
                                 rc, jax.random.key(g))[0]
                   for g in range(args.groups)]
         wsteps = [ps for ps in plan_window(cfg, lc, pcfg, [wtrees])
                   if not ps.is_empty]
+        for ps in wsteps:
+            warm.prewarm(step=ps)
         if wsteps:
-            weng = TreeTrainEngine(cfg, opt_cfg, impl=args.impl)
+            # run the warm window through the SHARED cache twice: the
+            # update's donated inputs switch to its own committed output
+            # layout after step one, and the second pass proves the AOT
+            # executables absorb that without retracing
+            weng = TreeTrainEngine(cfg, opt_cfg, impl=args.impl,
+                                   exec_cache=warm.cache,
+                                   universe=warm.universe)
             p2 = jax.tree.map(jnp.copy, params)
             o2 = jax.tree.map(jnp.copy, opt_state)
             for _ in range(2):
                 p2, o2 = weng.warmup(p2, o2, wsteps[0].execution_plan())
             assert weng.host_syncs == 0, "warmup must not sync"
+            assert weng.retraces == 0, \
+                "prewarmed executables must cover the warm window"
             # updated params can carry different buffer layouts than the
             # init ones — warm the rollout executables for that variant
             # too, or the generator recompiles mid-loop
@@ -182,14 +209,19 @@ def main() -> None:
                           np.zeros(args.prompt_len, np.int32), rc,
                           jax.random.key(0))
             del p2, o2
+        print(f"[rl] aot-warmup: {len(warm.cache)} executables "
+              f"({warm.cache.compile_s:.1f}s compile) over "
+              f"{len(warm.cache.signatures())} signatures")
 
         store = WeightStore(params, version=done)
         engine = TreeTrainEngine(cfg, opt_cfg, impl=args.impl,
-                                 weight_store=store)
+                                 weight_store=store,
+                                 exec_cache=warm.cache,
+                                 universe=warm.universe)
         engine.steps_done = done
         svc = AsyncTreeRLService(cfg, store, sc,
                                  num_steps=args.steps).start()
-        pipe = plans(cfg, lc, svc.tree_batches(), pcfg)
+        pipe = plans(cfg, lc, svc.tree_batches(), pcfg, warmup=warm)
 
         dropped = 0
         history = []
@@ -235,7 +267,16 @@ def main() -> None:
               f"decode {st.decode_tokens} tok")
         print(f"[rl] plan-ahead: {pipe.built} plans, "
               f"{pipe.build_s * 1e3:.0f}ms built")
+        print(f"[rl] aot: {engine.retraces} mid-loop retraces, "
+              f"{engine.compile_wait_s * 1e3:.0f}ms exposed compile "
+              f"wait, {warm.prewarmed} executables prewarmed in-stream")
         assert dropped == 0, f"{dropped} trees dropped"
+        if args.smoke:
+            # the loop's whole signature stream was prewarmed on the
+            # pipeline's build threads — a retrace means the AOT cache
+            # missed a shape the planner emitted
+            assert engine.retraces == 0, \
+                f"{engine.retraces} mid-loop retraces (AOT cache missed)"
         assert engine.max_lag_seen <= lag_bound, \
             (engine.max_lag_seen, lag_bound)
         assert all(np.isfinite(losses)), losses

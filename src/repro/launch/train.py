@@ -110,6 +110,18 @@ def main() -> None:
                     help="minimum shared-prefix tokens for a graft to be "
                          "considered (shorter matches never pay for the "
                          "merge)")
+    ap.add_argument("--aot-warmup", action="store_true",
+                    help="AOT warmup engine: background-precompile the "
+                         "reachable signature universe at startup and "
+                         "pre-warm each window's exact executables from "
+                         "the planner's build threads — the engine never "
+                         "blocks on a cold jit bucket (train/warmup)")
+    ap.add_argument("--warmup-threads", type=int, default=1,
+                    help="background AOT compile threads for --aot-warmup")
+    ap.add_argument("--compile-cache-dir", default=None,
+                    help="persistent jax compilation cache directory: a "
+                         "restarted run re-loads every compiled module "
+                         "from disk instead of recompiling")
     ap.add_argument("--mesh", default="host",
                     choices=["host", "single", "multi"])
     ap.add_argument("--seed", type=int, default=0)
@@ -191,6 +203,13 @@ def main() -> None:
                       auto_capacity=auto_capacity,
                       gen_kwargs=gen_kwargs)
 
+    if args.compile_cache_dir:
+        # before ANY compile (param init included) so every module the
+        # run produces lands in — or loads from — the persistent cache
+        from repro.train.warmup import configure_compile_cache
+        d = configure_compile_cache(args.compile_cache_dir)
+        print(f"[train] persistent compile cache: {d}")
+
     with sh.use_mesh(mesh, data_axes=daxes):
         params = init_params(cfg, jax.random.key(args.seed))
         opt_state = init_opt_state(params)
@@ -200,14 +219,33 @@ def main() -> None:
                                                 opt_state)
             done = int(load_meta(args.resume).get("steps", 0))
             print(f"[train] resumed {args.resume} @ step {done}")
-        engine = TreeTrainEngine(cfg, opt_cfg, impl=args.impl)
-        engine.steps_done = done
 
         pcfg = PlannerConfig(lookahead=args.lookahead,
                              plan_workers=args.plan_workers,
                              num_replicas=ndata, max_rows=args.rows,
                              graft=args.graft, min_graft=args.min_graft)
-        pipe = plans(cfg, lc, args.steps, pcfg)
+
+        svc = None
+        if args.aot_warmup:
+            from repro.core.plan_cost import CompileCacheSim
+            from repro.train.warmup import AOTWarmupService
+            svc = AOTWarmupService(cfg, lc, pcfg, params=params,
+                                   opt_cfg=opt_cfg, opt_state=opt_state,
+                                   impl=args.impl,
+                                   sim=CompileCacheSim())
+            svc.start(threads=args.warmup_threads)
+            print(f"[train] AOT warmup: "
+                  f"{len(svc.signature_list())} universe signatures "
+                  f"compiling on {args.warmup_threads} background "
+                  f"thread(s)")
+
+        engine = TreeTrainEngine(
+            cfg, opt_cfg, impl=args.impl,
+            exec_cache=svc.cache if svc else None,
+            universe=svc.universe if svc else None)
+        engine.steps_done = done
+
+        pipe = plans(cfg, lc, args.steps, pcfg, warmup=svc)
 
         tokens_done = padded_total = part_trees = part_tokens = 0
         dropped_total = 0
@@ -264,6 +302,16 @@ def main() -> None:
         if args.auto_partition:
             print(f"[train] partitioned: {part_trees} oversized trees, "
                   f"{part_tokens} tokens, {dropped_total} dropped")
+        if svc is not None:
+            svc.stop()
+            st = svc.stats()
+            print(f"[train] aot-warmup: {st['size']} executables "
+                  f"({st['compile_s']:.1f}s compile, "
+                  f"{svc.prewarmed} prewarmed), engine retraces "
+                  f"{engine.retraces}, exposed compile wait "
+                  f"{engine.compile_wait_s * 1e3:.0f}ms"
+                  + (f", {st['errors']} warmup errors"
+                     if st["errors"] else ""))
         if args.save:
             save_checkpoint(args.save, params, opt_state,
                             meta={"arch": cfg.name,

@@ -28,9 +28,11 @@ reducing bit-exactly to SFT — the same engine serves both scenarios.
 """
 from __future__ import annotations
 
+import logging
+import time
 from dataclasses import dataclass
 from functools import lru_cache
-from typing import Any, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -42,9 +44,13 @@ from repro.core.gateway import (PartitionPlan, _cut_caps_view,
                                 _names_sig, _slice_gw_row, _stack_gw_rows,
                                 _vjp1, _vjp2, assemble_child_gw,
                                 route_child_cot)
+from repro.core.plan_cost import packed_signature, wave_signature_of
 from repro.models.model import loss_and_metrics
+from repro.train.exec_cache import ExecutableCache, exec_key
 from repro.train.optimizer import OptimizerConfig
 from repro.train.train_step import jitted_update
+
+logger = logging.getLogger(__name__)
 
 # the on-device scalar accumulator: [loss, nll_sum, weight_sum]
 NUM_SCALARS = 3
@@ -198,6 +204,8 @@ def run_partition_plan(
     impl: str = "ref",
     loss_scale: jax.Array,
     donate: bool = True,
+    exec_lookup: Optional[Callable] = None,
+    seq_len: Optional[int] = None,
 ) -> tuple[Any, jax.Array]:
     """Execute a PartitionPlan: forward sweep in wave order (assembling
     each fragment's gateway from its parent's runtime captures), backward
@@ -207,8 +215,21 @@ def run_partition_plan(
     passes 1/num_trees so the partitioned gradients land in the shared
     accumulator already normalized, with no extra scaling pass.  The loss
     scalar is scaled the same way; nll/weight sums stay raw.  Returns the
-    updated ``(acc, scal)`` — no host sync happens here."""
+    updated ``(acc, scal)`` — no host sync happens here.
+
+    ``exec_lookup(variant, sig, fn, args)`` (the engine's AOT
+    executable-cache resolver) swaps each jitted wave fn for its
+    precompiled executable; None dispatches the plain jit (every new
+    shape bucket retraces inside jax)."""
     st: list[dict] = []
+    S = seq_len
+    if S is None and plan.waves:
+        S = plan.waves[0].batch["tokens"].shape[1]
+
+    def resolve(variant, wp, fn, args):
+        if exec_lookup is None:
+            return fn(*args)
+        return exec_lookup(variant, wave_signature_of(wp, S), fn, args)
 
     # ---- forward sweep, wave order ---------------------------------------
     for wp in plan.waves:
@@ -230,7 +251,9 @@ def run_partition_plan(
                                 rows_idx=wp.slot_rows)
         fwd, _ = _wave_exec_fns(cfg, _names_sig(wp.capspecs), impl,
                                 wp.has_gw, donate)
-        caps, scal = fwd(params, batch, gw, wp.capspecs, scal, loss_scale)
+        caps, scal = resolve("wave.fwd", wp, fwd,
+                             (params, batch, gw, wp.capspecs, scal,
+                              loss_scale))
         st.append(dict(batch=batch, gw=gw, caps=caps, cot_gw=None,
                        cot_cut={}))
 
@@ -242,8 +265,9 @@ def run_partition_plan(
             _embed_cut_cot(cot_caps, cot_view, cname, r)
         _, bwd = _wave_exec_fns(cfg, _names_sig(wp.capspecs), impl,
                                 wp.has_gw, donate)
-        acc, g_gw = bwd(params, s["batch"], s["gw"], wp.capspecs,
-                        (loss_scale, cot_caps), acc)
+        acc, g_gw = resolve("wave.bwd", wp, bwd,
+                            (params, s["batch"], s["gw"], wp.capspecs,
+                             (loss_scale, cot_caps), acc))
         if not wp.has_gw:
             continue
         if s["cot_gw"] is not None:
@@ -286,14 +310,27 @@ class TreeTrainEngine:
     exactly ONE host sync to materialize the logging metrics.
 
     ``host_syncs`` counts every device→host transfer the engine issues —
-    benchmarks assert it stays ≤ 1 per optimizer step."""
+    benchmarks assert it stays ≤ 1 per optimizer step.
+
+    With an ``exec_cache`` (:class:`~repro.train.exec_cache
+    .ExecutableCache`, filled by ``train/warmup.AOTWarmupService`` and
+    the planner's pre-warm hook) every dispatch first resolves a
+    precompiled AOT executable keyed by its planner-level signature —
+    a hit bypasses jax's tracing machinery entirely.  A miss compiles
+    synchronously (the honest slow path), counted in ``retraces`` with
+    the stall seconds in ``compile_wait_s``; when a ``universe``
+    (``analysis/signatures.SignatureUniverse``) is attached, an
+    out-of-universe miss logs a warning naming why the planner escaped
+    the enumerable bucket set."""
 
     METRIC_NAMES = ("loss", "nll_sum", "weight_sum", "grad_norm", "lr")
 
     def __init__(self, cfg: ModelConfig,
                  opt_cfg: Optional[OptimizerConfig] = None, *,
                  impl: str = "ref", donate: bool = True,
-                 weight_store=None):
+                 weight_store=None,
+                 exec_cache: Optional[ExecutableCache] = None,
+                 universe=None):
         self.cfg = cfg
         self.opt_cfg = opt_cfg
         self.impl = impl
@@ -305,6 +342,45 @@ class TreeTrainEngine:
         # each consumed plan (trainer step − oldest tree's version)
         self.weight_store = weight_store
         self.max_lag_seen = 0
+        # AOT executable cache: retraces counts cold-bucket stalls the
+        # warmup/prewarm path failed to hide (0 on an in-universe
+        # stream after warmup — asserted by benchmarks and rl_loop)
+        self.exec_cache = exec_cache
+        self.universe = universe
+        self.retraces = 0
+        self.compile_wait_s = 0.0
+
+    # -- AOT executable resolution ----------------------------------------
+    def _exec_lookup(self, variant: str, sig, fn, args: tuple):
+        """Resolve one dispatch: cache hit → the AOT-compiled executable;
+        miss → synchronous ``lower().compile()`` (counted as a retrace,
+        its wall time as exposed compile wait), then cached so the bucket
+        stalls at most once per run."""
+        key = exec_key(variant, sig, args)
+        compiled = self.exec_cache.get(key)
+        if compiled is not None:
+            return compiled(*args)
+        t0 = time.perf_counter()
+        compiled, _ = self.exec_cache.compile_once(key, fn, args)
+        self.compile_wait_s += time.perf_counter() - t0
+        self.retraces += 1
+        if self.universe is not None and sig[0] in ("packed", "wave"):
+            ok, why = self.universe.contains(sig)
+            if not ok:
+                logger.warning(
+                    "out-of-universe signature %s (%s): compiled "
+                    "synchronously on the slow path — the planner "
+                    "escaped the enumerable bucket set", sig, why)
+            else:
+                logger.info(
+                    "in-universe signature %s was not prewarmed: "
+                    "compiled synchronously (%s)", sig, variant)
+        return compiled(*args)
+
+    def _run(self, variant: str, sig, fn, args: tuple):
+        if self.exec_cache is None:
+            return fn(*args)
+        return self._exec_lookup(variant, sig, fn, args)
 
     # -- gradient accumulation (no optimizer, no host sync) ---------------
     def accumulate(self, params, plan: ExecutionPlan):
@@ -318,16 +394,19 @@ class TreeTrainEngine:
         if plan.packed is not None:
             batch = dict(plan.packed.inputs)
             batch["num_trees"] = n
+            B, S = batch["tokens"].shape
+            psig = packed_signature(B, S)
             if not has_waves:
                 # single-execution fast path: the grads ARE the
                 # accumulator — no param-sized zero buffer
                 f = _packed_exec_fn(self.cfg, self.impl, self.donate,
                                     with_acc=False)
-                return f(params, batch, scal)
+                return self._run("packed", psig, f, (params, batch, scal))
             acc = jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32),
                                params)
             f = _packed_exec_fn(self.cfg, self.impl, self.donate)
-            acc, scal = f(params, batch, acc, scal)
+            acc, scal = self._run("packed+acc", psig, f,
+                                  (params, batch, acc, scal))
         else:
             acc = jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32),
                                params)
@@ -336,7 +415,9 @@ class TreeTrainEngine:
                 self.cfg, params, plan.partition, acc, scal,
                 impl=self.impl,
                 loss_scale=jnp.asarray(1.0 / n, jnp.float32),
-                donate=self.donate)
+                donate=self.donate,
+                exec_lookup=(None if self.exec_cache is None
+                             else self._exec_lookup))
         return acc, scal
 
     # -- one optimizer step ------------------------------------------------
@@ -347,7 +428,8 @@ class TreeTrainEngine:
             "TreeTrainEngine.step needs an OptimizerConfig"
         grads, scal = self.accumulate(params, plan)
         upd = jitted_update(self.opt_cfg, self.donate)
-        params, opt_state, om = upd(params, grads, opt_state)
+        params, opt_state, om = self._run("update", ("update",), upd,
+                                          (params, grads, opt_state))
         vec = jnp.concatenate(
             [scal, jnp.stack([om["grad_norm"], om["lr"]]
                              ).astype(jnp.float32)])
@@ -376,7 +458,8 @@ class TreeTrainEngine:
             "TreeTrainEngine.warmup needs an OptimizerConfig"
         grads, _scal = self.accumulate(params, plan)
         upd = jitted_update(self.opt_cfg, self.donate)
-        params, opt_state, _om = upd(params, grads, opt_state)
+        params, opt_state, _om = self._run("update", ("update",), upd,
+                                           (params, grads, opt_state))
         jax.block_until_ready(params)
         return params, opt_state
 

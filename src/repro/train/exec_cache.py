@@ -1,0 +1,162 @@
+"""Signature-keyed AOT executable cache — the runtime half of the
+compile-signature story (ROADMAP item 4).
+
+``analysis/signatures`` proves a planner run stays inside an enumerable
+pow2-bucket :class:`SignatureUniverse`; this module holds the compiled
+artifacts for that universe.  Every engine dispatch variant (packed
+microbatch with/without accumulator, wave forward/backward, optimizer
+update) is keyed by
+
+    (variant, signature, arg fingerprint)
+
+where the *signature* is the planner-level shape bucket
+(``core/plan_cost.packed_signature`` / ``wave_signature``) and the
+*fingerprint* pins the residual aval structure the signature does not
+capture (exact leaf shapes/dtypes and the pytree layout — e.g. an SSM
+conv tail shorter than the tap count on an unusually short ancestor
+path).  A hit returns a ``jax.stages.Compiled`` the engine calls
+directly — no tracing, no XLA compile, no stall; a miss falls back to a
+synchronous ``lower().compile()`` the engine counts as a retrace.
+
+MaxText's bucketed-executable-cache idiom (``offline_inference.py``):
+the warmup service (``train/warmup``) fills this cache ahead of time on
+background threads, and the planner pre-warms exact upcoming shapes from
+its build workers, so by the time ``TreeTrainEngine.step`` looks a key
+up the executable is already here.
+
+Thread-safe; imports jax only (no model/engine deps) so every layer can
+share it without cycles.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable, Hashable, Optional
+
+import jax
+
+
+def abstractify(x):
+    """Pytree of arrays/np scalars → ShapeDtypeStructs (non-array leaves
+    pass through: python ints become weak-typed traced scalars, matching
+    what a real dispatch traces)."""
+    def one(leaf):
+        if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+            return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype)
+        return leaf
+    return jax.tree.map(one, x)
+
+
+def arg_fingerprint(args: tuple) -> Hashable:
+    """Structural fingerprint of a call's positional args: the pytree
+    layout plus every array leaf's (shape, dtype).  Non-array leaves
+    (python ints — e.g. the batch's ``num_trees``) fingerprint by *type*,
+    not value: jit traces them as weak-typed scalars, so one executable
+    serves every value.  Two calls with equal fingerprints trace to the
+    same avals, hence dispatch the same compiled executable."""
+    leaves, treedef = jax.tree.flatten(args)
+
+    def one(leaf):
+        if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+            return (tuple(leaf.shape), str(leaf.dtype))
+        return ("py", type(leaf).__name__)
+
+    return (treedef, tuple(one(leaf) for leaf in leaves))
+
+
+def exec_key(variant: str, sig: Hashable, args: tuple) -> Hashable:
+    """The cache key one engine dispatch resolves to."""
+    return (variant, sig, arg_fingerprint(args))
+
+
+class ExecutableCache:
+    """Thread-safe {exec_key: jax.stages.Compiled} with hit/miss/compile
+    accounting.  One instance is shared by the warmup service (producer),
+    the planner's pre-warm hook (producer, on build threads) and the
+    engine (consumer) — ``compile_once`` makes concurrent fills of the
+    same key idempotent (both threads compile, one insert wins; XLA's
+    own in-process cache dedups the backend work)."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._store: dict[Hashable, Any] = {}
+        self.hits = 0
+        self.misses = 0            # lookups that found nothing
+        self.inserts = 0           # distinct executables cached
+        self.compile_s = 0.0       # total seconds spent compiling into
+        #                            this cache, across all threads
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._store)
+
+    def __contains__(self, key: Hashable) -> bool:
+        with self._lock:
+            return key in self._store
+
+    def signatures(self) -> set:
+        """The distinct planner-level signatures currently compiled."""
+        with self._lock:
+            return {k[1] for k in self._store}
+
+    def get(self, key: Hashable):
+        with self._lock:
+            c = self._store.get(key)
+            if c is None:
+                self.misses += 1
+            else:
+                self.hits += 1
+            return c
+
+    def put(self, key: Hashable, compiled) -> bool:
+        """Insert; returns False if the key was already present (the
+        existing executable is kept — first insert wins)."""
+        with self._lock:
+            if key in self._store:
+                return False
+            self._store[key] = compiled
+            self.inserts += 1
+            return True
+
+    def compile_once(self, key: Hashable, fn, args: tuple) -> tuple[Any, bool]:
+        """Lower+compile ``fn`` on (abstract or concrete) ``args`` and
+        cache it under ``key``; a no-op returning the cached executable
+        if the key is already filled.  Returns (compiled, was_new)."""
+        with self._lock:
+            c = self._store.get(key)
+        if c is not None:
+            return c, False
+        t0 = time.perf_counter()
+        compiled = fn.lower(*args).compile()
+        dt = time.perf_counter() - t0
+        with self._lock:
+            if key in self._store:
+                return self._store[key], False
+            self._store[key] = compiled
+            self.inserts += 1
+            self.compile_s += dt
+            return compiled, True
+
+    def stats(self) -> dict:
+        with self._lock:
+            return dict(size=len(self._store), hits=self.hits,
+                        misses=self.misses, inserts=self.inserts,
+                        compile_s=self.compile_s)
+
+
+ExecLookup = Callable[[str, Hashable, Any, tuple], Any]
+
+
+def make_lookup(cache: Optional[ExecutableCache]) -> Optional[ExecLookup]:
+    """A bare (variant, sig, fn, args) → callable resolver over a cache,
+    for callers outside the engine (no retrace accounting): hit returns
+    the compiled executable, miss compiles synchronously and fills."""
+    if cache is None:
+        return None
+
+    def lookup(variant: str, sig: Hashable, fn, args: tuple):
+        compiled, _ = cache.compile_once(exec_key(variant, sig, args), fn,
+                                         args)
+        return compiled
+
+    return lookup

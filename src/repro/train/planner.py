@@ -69,9 +69,9 @@ from repro.core.partition import (TreePartition, choose_capacity,
                                   partition_schedule_load, partition_tree)
 from repro.core.plan_cost import (DEFAULT_WEIGHTS, CompileCacheSim,
                                   CostWeights, PackingCost,
-                                  balanced_row_order, graft_gain,
-                                  packed_signature, round_to_multiple,
-                                  score_packing)
+                                  _packing_live_blocks, balanced_row_order,
+                                  graft_gain, packed_signature, pow2,
+                                  round_to_multiple, score_packing)
 from repro.core.tree import TrajectoryTree, serialize_tree
 from repro.data.loader import LoaderConfig, StepBatch, tree_stream
 from repro.models.model import needs_chunks, prepare_batch
@@ -570,14 +570,57 @@ def plan_window(cfg: ModelConfig, lc: LoaderConfig, pc: PlannerConfig,
             for o in over:
                 steps[o.src - first_index].oversized.append(o)
         else:
-            # balance partitioned token load across the window's steps
+            # balance partitioned token load across the window's steps,
+            # steering trees toward steps where their waves reuse an
+            # already-live row bucket: a fresh bucket is a fresh wave jit
+            # signature, charged at CostWeights.wave_compile just like
+            # score_packing charges packed signatures
+            R = max(pc.num_replicas, 1)
+            mrows = pc.max_rows if pc.max_rows is not None else lc.batch_rows
+            max_bucket = R * pow2(-(-mrows // R))
+            seen_rows = {s[1] for s in cache.seen if s[0] == "wave"}
+
+            def depth_widths(o: OversizedTree) -> dict[int, int]:
+                """Fragments per wave depth of one partitioned tree (the
+                forest is cached — build_partition_plan reuses it)."""
+                w: dict[int, int] = {}
+                dep: dict[int, int] = {}
+                for p in o.forest(cap, chunk, lc.loss_mode):
+                    d = 0 if p.parent_pid < 0 else dep[p.parent_pid] + 1
+                    dep[p.pid] = d
+                    w[d] = w.get(d, 0) + 1
+                return w
+
+            def row_bucket(n: int) -> int:
+                return min(R * pow2(-(-n // R)), max_bucket)
+
+            def fresh_buckets(sw: dict[int, int], w: dict[int, int]) -> int:
+                """Row buckets this tree's waves would newly open in a
+                step already holding ``sw`` fragments per depth."""
+                fresh = 0
+                for d, n in w.items():
+                    cur = sw.get(d, 0)
+                    b = row_bucket(cur + n)
+                    if b != (row_bucket(cur) if cur else None) \
+                            and b not in seen_rows:
+                        fresh += 1
+                return fresh
+
             loads = [0] * W
+            step_w: list[dict[int, int]] = [{} for _ in range(W)]
+            wave_w = pc.weights.wave_compile
             for o in sorted(over,
                             key=lambda o: -o.load(cap, chunk,
                                                   lc.loss_mode)):
-                s = min(range(W), key=lambda s_: (loads[s_], s_))
+                w = depth_widths(o)
+                s = min(range(W),
+                        key=lambda s_: (loads[s_]
+                                        + wave_w * fresh_buckets(
+                                            step_w[s_], w), s_))
                 steps[s].oversized.append(o)
                 loads[s] += o.load(cap, chunk, lc.loss_mode)
+                for d, n in w.items():
+                    step_w[s][d] = step_w[s].get(d, 0) + n
     else:
         for o in over:
             steps[o.src - first_index].dropped += o.n_src
@@ -586,7 +629,8 @@ def plan_window(cfg: ModelConfig, lc: LoaderConfig, pc: PlannerConfig,
 
 def plan_stream(cfg: ModelConfig, lc: LoaderConfig,
                 source: "int | Iterable[Sequence[TrajectoryTree]]",
-                pc: Optional[PlannerConfig] = None
+                pc: Optional[PlannerConfig] = None, *,
+                cache: Optional[CompileCacheSim] = None
                 ) -> Iterator[PlannedStep]:
     """The scheduler's main stream: ingest trees, plan each lookahead
     window globally, yield non-empty PlannedSteps in step order.
@@ -597,9 +641,13 @@ def plan_stream(cfg: ModelConfig, lc: LoaderConfig,
     queue (``serve/service.AsyncTreeRLService.tree_batches``), a dataset
     reader, etc.  A live source is pulled at most ``lookahead`` steps
     ahead of the consumed plan, so the planner adds no extra staleness
-    beyond its window."""
+    beyond its window.
+
+    ``cache``: an optional shared :class:`CompileCacheSim` — pass the AOT
+    warmup service's simulator so the stream's signature commits feed its
+    hit-frequency warmup ordering (``train/warmup``)."""
     pc = pc or PlannerConfig()
-    cache = CompileCacheSim()
+    cache = cache if cache is not None else CompileCacheSim()
     W = max(1, pc.lookahead)
     if isinstance(source, int):
         gen: Iterator = tree_stream(cfg, lc, source)
@@ -762,7 +810,8 @@ class PlanPipeline:
 def plans(cfg: ModelConfig, lc: LoaderConfig,
           source: "int | Iterable[Sequence[TrajectoryTree]]",
           pc: Optional[PlannerConfig] = None, *,
-          max_rows: Optional[int] = None) -> PlanPipeline:
+          max_rows: Optional[int] = None,
+          warmup=None) -> PlanPipeline:
     """THE planner entrypoint: a :class:`PlanPipeline` of
     :class:`PlannedStep`\\ s, scheduled over ``source`` and built on
     background threads.
@@ -774,6 +823,13 @@ def plans(cfg: ModelConfig, lc: LoaderConfig,
     (``TreeTrainEngine.step``) or ``step.step_batch()`` for the raw
     packed rows — both are cached, already-paid lookups.
 
+    ``warmup``: an :class:`~repro.train.warmup.AOTWarmupService` (or any
+    object with ``prewarm(step=...)``) — each step's exact executables
+    are AOT-compiled on the pipeline's build threads the moment its
+    plans exist, so upcoming signatures compile while the engine trains
+    the current step and ``TreeTrainEngine`` never blocks on a cold
+    bucket.
+
     Supersedes the deprecated ``data/loader.step_batches`` and
     ``data/loader.execution_plans`` wrappers (one-release warning)."""
     pc = pc or PlannerConfig()
@@ -782,21 +838,52 @@ def plans(cfg: ModelConfig, lc: LoaderConfig,
 
     def build(ps: PlannedStep) -> PlannedStep:
         ps.execution_plan()           # materialize on the worker thread
+        if warmup is not None:
+            warmup.prewarm(step=ps)   # AOT-compile before consumption
         return ps
 
-    return PlanPipeline(plan_stream(cfg, lc, source, pc), build,
-                        workers=pc.plan_workers, depth=pc.pipeline_depth)
+    sim = getattr(warmup, "sim", None) if warmup is not None else None
+    return PlanPipeline(plan_stream(cfg, lc, source, pc, cache=sim),
+                        build, workers=pc.plan_workers,
+                        depth=pc.pipeline_depth)
 
 
 def plan_pipeline(cfg: ModelConfig, lc: LoaderConfig, num_batches: int,
                   pc: Optional[PlannerConfig] = None, *,
-                  max_rows: Optional[int] = None) -> PlanPipeline:
+                  max_rows: Optional[int] = None,
+                  warmup=None) -> PlanPipeline:
     """ExecutionPlan stream behind the async pipeline: schedule on the
     source iterator, build (materialize rows + partition waves + device-
     ready inputs) on ``plan_workers`` background threads."""
     pc = pc or PlannerConfig()
     if max_rows is not None and pc.max_rows is None:
         pc = replace(pc, max_rows=max_rows)
-    return PlanPipeline(plan_stream(cfg, lc, num_batches, pc),
-                        lambda ps: ps.execution_plan(),
+
+    def build(ps: PlannedStep):
+        plan = ps.execution_plan()
+        if warmup is not None:
+            warmup.prewarm(step=ps)
+        return plan
+
+    return PlanPipeline(plan_stream(cfg, lc, num_batches, pc), build,
                         workers=pc.plan_workers, depth=pc.pipeline_depth)
+
+
+def planned_step_features(ps: PlannedStep,
+                          block: Optional[int] = None) -> dict:
+    """Host-side cost-model features of one built step, paired with the
+    measured step wall time by ``benchmarks/run.py`` to least-squares-fit
+    :class:`~repro.core.plan_cost.CostWeights` (``--calibrate``)."""
+    from repro.analysis.signatures import step_signatures
+    plan = ps.execution_plan()
+    block = block or ps.pc.block
+    row_sizes = [[ps.fits[i].ser.n for i in r] for r in ps.rows]
+    live, causal = (_packing_live_blocks(row_sizes, ps.lc.seq_len, block)
+                    if row_sizes else (0, 0))
+    return dict(index=ps.index,
+                padded_tokens=plan.padded_tokens,
+                live_blocks=live,
+                causal_blocks=causal,
+                num_waves=(0 if plan.partition is None
+                           else len(plan.partition.waves)),
+                signatures=[str(s) for s in step_signatures(ps)])

@@ -321,8 +321,12 @@ def _check_planner_equivalence(family, impl):
     engine = TreeTrainEngine(cfg, impl=impl, donate=False)
     grads, scal = engine.accumulate(params, ps.execution_plan())
     l_eng = float(np.asarray(scal)[0])
-    assert abs(l_eng - l_ref) / max(abs(l_ref), 1e-9) <= 1e-6
-    assert _max_rel(grads, g_ref) <= 1e-6
+    # 5e-6, not 1e-6: the compile-aware oversized router may co-locate a
+    # window's partitioned trees, so the engine's wave grouping (hence
+    # its f32 accumulation ORDER) differs from the reference driver's —
+    # same math, reordered sums
+    assert abs(l_eng - l_ref) / max(abs(l_ref), 1e-9) <= 5e-6
+    assert _max_rel(grads, g_ref) <= 5e-6
 
 
 def test_planner_matches_two_branch_dense_ref():

@@ -194,6 +194,10 @@ def test_checkpoint_roundtrip_with_meta(tmp_path):
 @pytest.mark.slow
 def test_rl_loop_cli_soak(tmp_path):
     env = dict(os.environ)
+    # collected-alongside shardlint modules force 512 fake XLA devices
+    # into os.environ — a real-device launcher subprocess must not
+    # inherit that (512-way SPMD on host CPUs runs ~40x slower)
+    env.pop("XLA_FLAGS", None)
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     env["PYTHONPATH"] = os.path.join(root, "src")
     ck = str(tmp_path / "ck")

@@ -119,17 +119,27 @@ def test_wave_driver_matches_recursive_driver():
     assert _max_rel(g_w, g_r) < 1e-4
 
 
-def test_train_cli_auto_partition_end_to_end(monkeypatch, capsys):
+def test_train_cli_auto_partition_end_to_end():
     """launch/train.py with --auto-partition trains on a stream containing
     trees larger than --seq-len, end to end, with zero dropped trees."""
-    from repro.launch import train as train_mod
-    monkeypatch.setattr(
-        "sys.argv",
-        ["train", "--arch", "qwen1.5-0.5b", "--smoke", "--steps", "3",
-         "--seq-len", "96", "--rows", "2", "--trees", "3",
-         "--auto-partition", "--capacity", "64"])
-    train_mod.main()
-    out = capsys.readouterr().out
+    import os
+    import subprocess
+    import sys
+    env = dict(os.environ)
+    # collected-alongside shardlint modules force 512 fake XLA devices
+    # into os.environ — --rows 2 can't shard over a 512-replica mesh, so
+    # the real-device launcher subprocess must not inherit that
+    env.pop("XLA_FLAGS", None)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch",
+         "qwen1.5-0.5b", "--smoke", "--steps", "3", "--seq-len", "96",
+         "--rows", "2", "--trees", "3", "--auto-partition",
+         "--capacity", "64"],
+        capture_output=True, text=True, timeout=560, env=env, cwd=root)
+    assert r.returncode == 0, r.stdout + r.stderr
+    out = r.stdout
     assert "0 dropped" in out
     assert "partitioned:" in out
     # at least one oversized tree actually took the partitioned path
